@@ -1,0 +1,32 @@
+"""Beyond-paper ablation: MAFL vs the wider aggregation-scheme zoo
+(AFL / FedAsync / FedBuff) and the Eq. 10 interpretation (mixing vs literal),
+single seed for CPU budget."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import averaged_curves, save_result
+
+
+def run(quick=False):
+    t0 = time.time()
+    rounds = 16 if quick else 30
+    out = {}
+    for scheme in ("mafl", "afl", "fedasync", "fedbuff"):
+        _, acc, loss = averaged_curves(scheme, rounds=rounds,
+                                       eval_every=rounds // 2, seeds=(0,))
+        out[scheme] = {"accuracy": acc, "loss": loss}
+        print(f"{scheme:9s} acc@{rounds} = {acc[-1]:.3f}")
+    _, acc_lit, _ = averaged_curves("mafl", rounds=rounds,
+                                    eval_every=rounds // 2, seeds=(0,),
+                                    interpretation="literal")
+    out["mafl_literal_eq10"] = {"accuracy": acc_lit}
+    print(f"{'mafl-lit':9s} acc@{rounds} = {acc_lit[-1]:.3f} "
+          f"(literal Eq. 10: weight scales the parameter vector)")
+    out["seconds"] = round(time.time() - t0, 1)
+    save_result("ablation_schemes", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Figs. 3 & 4: accuracy and loss of the global model, MAFL vs conventional
+AFL, over rounds (3-seed average, per the paper's protocol)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import averaged_curves, save_result
+
+
+def run(quick=False):
+    t0 = time.time()
+    rounds = 16 if quick else None
+    kw = {} if rounds is None else {"rounds": rounds}
+    out = {}
+    for scheme in ("mafl", "afl"):
+        r_axis, acc, loss = averaged_curves(scheme, **kw)
+        out[scheme] = {"rounds": r_axis, "accuracy": acc, "loss": loss}
+        print(f"{scheme:5s} acc: " + " ".join(f"{a:.3f}" for a in acc))
+        print(f"{scheme:5s} loss: " + " ".join(f"{l:.3f}" for l in loss))
+    gap = out["mafl"]["accuracy"][-1] - out["afl"]["accuracy"][-1]
+    out["final_gap_mafl_minus_afl"] = gap
+    out["claim_mafl_geq_afl"] = bool(gap >= -0.02)
+    out["claim_accuracy_increases"] = bool(
+        out["mafl"]["accuracy"][-1] > out["mafl"]["accuracy"][0])
+    out["claim_loss_decreases"] = bool(
+        out["mafl"]["loss"][-1] < out["mafl"]["loss"][0])
+    out["seconds"] = round(time.time() - t0, 1)
+    save_result("fig3_fig4", out)
+    print(f"final gap (mafl-afl): {gap:+.4f}  [{out['seconds']}s]")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Deliverable (g): render the dry-run JSON records into the roofline table
+for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "mafl_agg"]
+
+
+def load_records(mesh="pod16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR,
+                                           f"dryrun_*_{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 99))
+    return recs
+
+
+def fmt_seconds(s):
+    if s >= 1:
+        return f"{s:7.2f}s "
+    if s >= 1e-3:
+        return f"{s * 1e3:7.2f}ms"
+    return f"{s * 1e6:7.2f}us"
+
+
+def render(mesh="pod16x16"):
+    recs = load_records(mesh)
+    lines = []
+    hdr = (f"| arch | shape | compute | memory | collective | bottleneck | "
+           f"useful-FLOPs | fits 16G |")
+    lines.append(hdr)
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_seconds(r['compute_s'])} "
+            f"| {fmt_seconds(r['memory_s'])} "
+            f"| {fmt_seconds(r['collective_s'])} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio'] * 100:5.1f}% "
+            f"| {'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def run():
+    for mesh in ("pod16x16", "pod2x16x16"):
+        recs = load_records(mesh)
+        if not recs:
+            continue
+        print(f"\n### Roofline — {mesh} ({len(recs)} records)\n")
+        print(render(mesh))
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark harness — one entry per paper artifact + system extras.
+
+  fig3_fig4  — accuracy & loss vs rounds, MAFL vs AFL (Figs. 3-4)
+  fig5       — beta sweep at 10 rounds (Fig. 5)
+  kernels    — Pallas kernel micro + v5e roofline projections (CSV rows)
+  roofline   — render the dry-run roofline tables (deliverable g)
+
+``python -m benchmarks.run``            runs everything (QUICK=1 shrinks the
+simulation rounds for CI-speed smoke runs).
+``python -m benchmarks.run fig5`` etc.  runs one.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    quick = bool(int(os.environ.get("QUICK", "0")))
+    t0 = time.time()
+
+    if which in ("all", "kernels"):
+        print("== kernel microbenchmarks ==")
+        from benchmarks import kernel_micro
+        kernel_micro.run()
+
+    if which in ("all", "roofline"):
+        print("\n== roofline (from dry-run artifacts) ==")
+        from benchmarks import roofline_report
+        roofline_report.run()
+
+    if which in ("all", "fig3", "fig4", "fig3_fig4"):
+        print("\n== Figs. 3-4: MAFL vs AFL accuracy/loss ==")
+        from benchmarks import fig3_fig4_accuracy_loss
+        fig3_fig4_accuracy_loss.run(quick=quick)
+
+    if which in ("all", "fig5"):
+        print("\n== Fig. 5: beta sweep ==")
+        from benchmarks import fig5_beta_sweep
+        fig5_beta_sweep.run(quick=quick)
+
+    if which in ("all", "ablation"):
+        print("\n== Beyond-paper: scheme ablation ==")
+        from benchmarks import ablation_schemes
+        ablation_schemes.run(quick=quick)
+
+    print(f"\ntotal {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fig. 5 in miniature: MAFL accuracy vs the aggregation proportion beta.
+
+    PYTHONPATH=src python examples/beta_ablation.py
+"""
+import dataclasses
+
+from repro.channel.params import ChannelParams
+from repro.core import run_simulation
+from repro.data import partition_vehicles, synth_mnist
+
+
+def main():
+    tr_i, tr_l, te_i, te_l = synth_mnist(n_train=4000, n_test=500, seed=0,
+                                         noise=0.5)
+    base = ChannelParams()
+    vehicles = partition_vehicles(tr_i, tr_l, base, seed=0, scale=0.01)
+    for beta in (0.1, 0.3, 0.5, 0.7, 0.9):
+        p = dataclasses.replace(base, beta=beta)
+        r = run_simulation(vehicles, te_i, te_l, scheme="mafl", rounds=10,
+                           l_iters=8, lr=0.05, params=p, eval_every=10,
+                           seed=0)
+        print(f"beta={beta:.1f}  acc@10 = {r.final_accuracy():.3f}")
+
+
+if __name__ == "__main__":
+    main()

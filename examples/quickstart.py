@@ -1,0 +1,34 @@
+"""Quickstart: the paper in miniature.
+
+Ten vehicles with Table-I heterogeneity train the paper's CNN on private
+shards of a synthetic-MNIST substitute; the RSU aggregates asynchronously.
+Compares MAFL (the paper) against conventional AFL (the baseline) for a few
+rounds and prints both accuracy curves.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.channel.params import ChannelParams
+from repro.core import run_simulation
+from repro.data import partition_vehicles, synth_mnist
+
+
+def main():
+    t0 = time.time()
+    tr_i, tr_l, te_i, te_l = synth_mnist(n_train=4000, n_test=500, seed=0,
+                                         noise=0.5)
+    p = ChannelParams()
+    vehicles = partition_vehicles(tr_i, tr_l, p, seed=0, scale=0.01)
+    print("per-vehicle D_i:", [v.size for v in vehicles])
+
+    for scheme in ("mafl", "afl"):
+        r = run_simulation(vehicles, te_i, te_l, scheme=scheme, rounds=12,
+                           l_iters=8, lr=0.05, eval_every=4, seed=0)
+        curve = ", ".join(f"r{rd}={a:.3f}" for rd, a in r.acc_history)
+        print(f"{scheme:5s}: {curve}")
+    print(f"done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

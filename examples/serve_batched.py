@@ -1,0 +1,17 @@
+"""Batched serving example: prefill a prompt batch, decode with a KV cache.
+
+Runs the attention-free rwkv6 family (O(1) decode state) by default; pass
+--arch to pick any assigned architecture.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch jamba-v0.1-52b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or []
+    if "--arch" not in argv:
+        argv += ["--arch", "rwkv6-1.6b"]
+    argv += ["--reduced", "--batch", "4", "--prompt-len", "32", "--gen", "12"]
+    main(argv)

@@ -1,0 +1,19 @@
+"""End-to-end driver: federated training of a transformer LM under MAFL.
+
+The aggregation layer is architecture-agnostic, so the same Algorithm-1 loop
+that trains the paper's CNN trains any assigned arch; this example runs the
+smollm family (the realistic on-vehicle size) reduced to CPU scale.
+
+    PYTHONPATH=src python examples/train_mafl_lm.py [--arch rwkv6-1.6b]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or []
+    if "--arch" not in argv:
+        argv += ["--arch", "smollm-360m"]
+    argv += ["--reduced", "--rounds", "15", "--l-iters", "3",
+             "--batch", "8", "--seq-len", "64", "--use-kernel"]
+    main(argv)

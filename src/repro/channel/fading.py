@@ -1,0 +1,29 @@
+"""Rayleigh fading with an AR(1) (autoregressive, Jakes-style) evolution per
+vehicle, as in the paper's simulation setup ([18]-[20]): h^i(t) is the power
+gain |g|^2 of a complex Gaussian g that decorrelates with coherence rho.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.channel.params import ChannelParams
+
+
+class RayleighAR1:
+    def __init__(self, params: ChannelParams, seed: int = 0):
+        self.p = params
+        self.rng = np.random.default_rng(seed)
+        # complex CN(0,1) state per vehicle
+        self.g = (self.rng.normal(size=params.K) +
+                  1j * self.rng.normal(size=params.K)) / np.sqrt(2)
+
+    def step(self) -> np.ndarray:
+        """Advance one slot; returns power gains h^i(t) = |g|^2, shape [K]."""
+        rho = self.p.fading_rho
+        innov = (self.rng.normal(size=self.p.K) +
+                 1j * self.rng.normal(size=self.p.K)) / np.sqrt(2)
+        self.g = rho * self.g + np.sqrt(1 - rho ** 2) * innov
+        return np.abs(self.g) ** 2
+
+    def gain(self, i: int) -> float:
+        return float(np.abs(self.g[i]) ** 2)

@@ -1,0 +1,34 @@
+"""Vehicle mobility (Eqs. 3-4): constant eastbound velocity, RSU at origin
+with antennas at height H.  Positions are a pure function of time."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.channel.params import ChannelParams
+
+
+class Mobility:
+    """Tracks K vehicles.  x_i(t) = x_i(0) + v t (Eq. 3), with wrap-around
+    re-entry at the coverage edge (the paper keeps K vehicles under the RSU;
+    re-entry keeps the population constant — documented in DESIGN.md)."""
+
+    def __init__(self, params: ChannelParams, x0: np.ndarray | None = None):
+        self.p = params
+        if x0 is None:
+            # spread vehicles across the western half of the coverage
+            x0 = -params.coverage + (2 * params.coverage) * (
+                np.arange(params.K) / params.K)
+        self.x0 = np.asarray(x0, np.float64)
+
+    def position(self, i: int, t: float) -> np.ndarray:
+        """P^i(t) = (d_x, d_y, 0), Eq. (3), with coverage wrap."""
+        span = 2 * self.p.coverage
+        dx = self.x0[i] + self.p.v * t
+        dx = ((dx + self.p.coverage) % span) - self.p.coverage
+        return np.array([dx, self.p.d_y, 0.0])
+
+    def distance(self, i: int, t: float) -> float:
+        """d^i(t) = || P^i(t) - P_R ||, Eq. (4), P_R = (0, 0, H)."""
+        pos = self.position(i, t)
+        ref = np.array([0.0, 0.0, self.p.H])
+        return float(np.linalg.norm(pos - ref))

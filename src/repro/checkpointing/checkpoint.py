@@ -1,0 +1,80 @@
+"""Flat-npz pytree checkpointing with retention, for the RSU global model
+and training driver state.  Path-keyed so any nested-dict pytree round-trips
+exactly (arrays only; scalars stored as 0-d arrays)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":       # npz can't round-trip bf16
+            arr = arr.view(np.uint16)
+            key = key + "::bf16"
+        flat[key] = arr
+    return flat
+
+
+def _part(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3,
+                    meta: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **_flatten(tree))
+    if meta is not None:
+        with open(path + ".json", "w") as f:
+            json.dump(meta, f)
+    _retain(directory, keep)
+    return path
+
+
+def _retain(directory: str, keep: int):
+    ckpts = sorted(f for f in os.listdir(directory)
+                   if re.fullmatch(r"ckpt_\d+\.npz", f))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(directory, old))
+        if os.path.exists(os.path.join(directory, old + ".json")):
+            os.remove(os.path.join(directory, old + ".json"))
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(f for f in os.listdir(directory)
+                   if re.fullmatch(r"ckpt_\d+\.npz", f))
+    return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    import ml_dtypes
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(_part(x) for x in p)
+        if key + "::bf16" in data:
+            arr = data[key + "::bf16"].view(ml_dtypes.bfloat16)
+        else:
+            arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(np.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

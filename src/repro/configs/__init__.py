@@ -1,0 +1,7 @@
+from repro.configs.base import ArchConfig, get_config, list_archs, register
+from repro.configs.shapes import SHAPES, InputShape, get_shape, legal_shapes
+
+__all__ = [
+    "ArchConfig", "get_config", "list_archs", "register",
+    "SHAPES", "InputShape", "get_shape", "legal_shapes",
+]

@@ -1,0 +1,24 @@
+"""llama3-405b [arXiv:2407.21783].
+
+Dense GQA flagship.  Pure full attention -> ``long_500k`` skipped (DESIGN.md).
+FSDP sharding is mandatory: bf16 weights alone are ~810 GB.
+"""
+from repro.configs.base import ArchConfig, register
+
+
+@register("llama3-405b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama3-405b",
+        family="dense",
+        source="arXiv:2407.21783",
+        n_layers=126,
+        d_model=16384,
+        n_heads=128,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=53248,
+        vocab_size=128256,
+        rope_theta=5e5,
+        notes="full attention; long_500k skipped per brief",
+    )

@@ -1,0 +1,20 @@
+"""The paper's primary contribution: mobility-aware asynchronous federated
+learning (MAFL) — delay weights (Eqs. 3-9), weighted aggregation (Eqs. 10-11),
+the RSU server, vehicle clients, and the event-driven async scheduler."""
+from repro.core.aggregation import (FedBuffAggregator, afl_update,
+                                    fedasync_update, fedavg_update,
+                                    mafl_update)
+from repro.core.client import Vehicle, VehicleData
+from repro.core.events import EventQueue, UploadEvent
+from repro.core.mafl import SimResult, evaluate, run_simulation
+from repro.core.server import RSUServer, RoundRecord
+from repro.core.weights import (combined_weight, training_weight,
+                                upload_weight, weighted_local_model)
+
+__all__ = [
+    "FedBuffAggregator", "afl_update", "fedasync_update", "fedavg_update",
+    "mafl_update", "Vehicle", "VehicleData", "EventQueue", "UploadEvent",
+    "SimResult", "evaluate", "run_simulation", "RSUServer", "RoundRecord",
+    "combined_weight", "training_weight", "upload_weight",
+    "weighted_local_model",
+]

@@ -1,0 +1,82 @@
+"""Vehicle-side local training (Algorithm 1, "Vehicle Update").
+
+A client owns a private data shard and runs ``l`` SGD iterations (Eq. 2) from
+the downloaded global model.  The trainable model is pluggable: the paper's
+CNN for the faithful reproduction, or any assigned transformer arch via
+``lm_local_step`` (the aggregation layer never inspects structure).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn import cnn_forward, cross_entropy_loss
+
+
+@dataclass
+class VehicleData:
+    """Private shard of vehicle i (1-based index per the paper)."""
+    index: int
+    images: np.ndarray      # [D_i, 28, 28, 1]
+    labels: np.ndarray      # [D_i]
+
+    @property
+    def size(self) -> int:
+        return len(self.labels)
+
+
+@jax.jit
+def _cnn_sgd_iter(params, images, labels, lr):
+    def loss_fn(p):
+        return cross_entropy_loss(cnn_forward(p, images), labels)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params = jax.tree_util.tree_map(lambda w, g: w - lr * g, params, grads)
+    return params, loss
+
+
+class Vehicle:
+    """One FL client.  ``local_update`` = l iterations of Eq. (1)+(2)."""
+
+    def __init__(self, data: VehicleData, lr: float = 0.01,
+                 batch_size: int = 128, seed: int = 0):
+        self.data = data
+        self.lr = lr
+        # The paper's Eq. (1) sums the loss over all D_i data each iteration;
+        # we use minibatch SGD (batch_size<=D_i) for CPU tractability — a
+        # documented deviation (DESIGN.md §6) that preserves Eq. (2).
+        self.batch_size = min(batch_size, data.size)
+        self.rng = np.random.default_rng(seed + data.index)
+
+    def local_update(self, global_params, l_iters: int):
+        params = global_params
+        last_loss = np.inf
+        for _ in range(l_iters):
+            sel = self.rng.choice(self.data.size, self.batch_size,
+                                  replace=False)
+            params, loss = _cnn_sgd_iter(
+                params, jnp.asarray(self.data.images[sel]),
+                jnp.asarray(self.data.labels[sel]), self.lr)
+            last_loss = float(loss)
+        return params, last_loss
+
+
+def make_lm_local_step(cfg, forward_fn) -> Callable:
+    """Local SGD step factory for transformer clients (examples/)."""
+
+    @jax.jit
+    def step(params, tokens, lr):
+        def loss_fn(p):
+            logits, aux = forward_fn(cfg, p, tokens[:, :-1])
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(logp, tokens[:, 1:, None], -1)
+            return jnp.mean(nll) + aux
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params = jax.tree_util.tree_map(lambda w, g: w - lr * g, params,
+                                        grads)
+        return params, loss
+
+    return step

@@ -1,0 +1,45 @@
+"""Event-driven asynchronous scheduler.
+
+TPU pods are bulk-synchronous, so wall-clock asynchrony is *simulated*: every
+vehicle's (train -> upload) cycle produces an upload-completion event at
+
+    t_done = t_download + C_l^i + C_u^i(t_upload_start)
+
+and the RSU consumes events in time order — exactly the paper's arrival
+semantics (Fig. 2), with each local-training burst itself a synchronous jit
+program.  See DESIGN.md §2 (hardware adaptation).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(order=True)
+class UploadEvent:
+    time: float
+    seq: int
+    vehicle: int = field(compare=False)          # 0-based
+    download_time: float = field(compare=False, default=0.0)
+    train_delay: float = field(compare=False, default=0.0)
+    upload_delay: float = field(compare=False, default=0.0)
+    payload: Any = field(compare=False, default=None)
+
+
+class EventQueue:
+    def __init__(self):
+        self._heap: list[UploadEvent] = []
+        self._seq = 0
+
+    def push(self, time: float, vehicle: int, **kw) -> UploadEvent:
+        ev = UploadEvent(time=time, seq=self._seq, vehicle=vehicle, **kw)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> UploadEvent:
+        return heapq.heappop(self._heap)
+
+    def __len__(self):
+        return len(self._heap)

@@ -1,0 +1,68 @@
+"""Hierarchical multi-pod MAFL (beyond paper, DESIGN.md §7).
+
+Maps the vehicular hierarchy onto the production mesh: each **pod is one RSU
+cohort** running the paper's asynchronous aggregation locally; a cross-pod
+EMA periodically reconciles the cohort models (the "cloud" tier the paper
+alludes to but does not model).  Built on ``shard_map`` over the ``pod``
+axis so each cohort's Eq. 10+11 update stays pod-local (zero inter-pod
+traffic) and only the reconciliation step touches ICI.
+
+Used by ``tests/test_hierarchical.py`` and the multi-pod dry-run notes in
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def pod_local_mafl(global_params, local_params, beta, weight):
+    """Eq. 10+11 per pod — identical math to ``aggregation.mafl_update`` but
+    expressed per-shard so it composes under ``shard_map``."""
+    alpha = jnp.clip((1.0 - beta) * weight, 0.0, 1.0)
+    return jax.tree_util.tree_map(
+        lambda g, l: ((1 - alpha) * g.astype(jnp.float32) +
+                      alpha * l.astype(jnp.float32)).astype(g.dtype),
+        global_params, local_params)
+
+
+def cross_pod_reconcile(params, mesh, pod_axis: str = "pod",
+                        shard_spec: P | None = None):
+    """Average the per-pod cohort models over the pod axis (one pmean per
+    leaf) — the only inter-pod traffic in the hierarchy.
+
+    ``shard_spec`` describes how each leaf's leading dim is laid out
+    (default: sharded over (pod, data) — the FSDP layout the launcher
+    uses); the pmean averages corresponding shards across pods."""
+    spec = shard_spec if shard_spec is not None else P((pod_axis, "data"))
+
+    def avg(t):
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.pmean(x, pod_axis), t)
+
+    fn = shard_map(avg, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                   check_rep=False)
+    return fn(params)
+
+
+def make_hierarchical_round(mesh, beta: float, pod_axis: str = "pod",
+                            reconcile_every: int = 4):
+    """Returns ``round_fn(step, cohort_models, upload, weight)`` that applies
+    the pod-local MAFL update every call and the cross-pod pmean every
+    ``reconcile_every`` rounds (jit-able; ``step`` is a traced scalar)."""
+
+    def round_fn(step, cohort_models, upload, weight):
+        updated = pod_local_mafl(cohort_models, upload, beta, weight)
+
+        def do_reconcile(t):
+            return cross_pod_reconcile(t, mesh, pod_axis)
+
+        return jax.lax.cond(
+            (step % reconcile_every) == reconcile_every - 1,
+            do_reconcile, lambda t: t, updated)
+
+    return round_fn

@@ -1,0 +1,76 @@
+"""RSU-side state: the global model, round log, and aggregation dispatch."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from repro.channel.params import ChannelParams
+from repro.core import aggregation
+from repro.core.weights import combined_weight
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    time: float
+    vehicle: int               # 0-based
+    upload_delay: float
+    train_delay: float
+    weight: float              # beta_u * beta_l (1.0 for plain AFL)
+    loss: Optional[float] = None
+    accuracy: Optional[float] = None
+
+
+class RSUServer:
+    """Holds w_g and applies one aggregation per received upload
+    (Algorithm 1 lines 6-7)."""
+
+    def __init__(self, init_params, params: ChannelParams,
+                 scheme: str = "mafl", use_kernel: bool = False,
+                 fedbuff_size: int = 3, fedasync_mix: float = 0.5,
+                 interpretation: str = "mixing"):
+        self.global_params = init_params
+        self.p = params
+        self.scheme = scheme
+        self.use_kernel = use_kernel
+        self.interpretation = interpretation
+        self.rounds: list[RoundRecord] = []
+        self._round = 0
+        self._fedbuff = aggregation.FedBuffAggregator(fedbuff_size)
+        self._fedasync_mix = fedasync_mix
+        self._last_update_time = 0.0
+
+    def receive(self, local_params, *, time: float, vehicle: int,
+                upload_delay: float, train_delay: float,
+                download_time: float) -> RoundRecord:
+        """One upload -> one round r (Eq. 11 et al.)."""
+        self._round += 1
+        weight = 1.0
+        if self.scheme == "mafl":
+            weight = combined_weight(self.p, upload_delay, train_delay)
+            self.global_params = aggregation.mafl_update(
+                self.global_params, local_params, self.p.beta, weight,
+                use_kernel=self.use_kernel,
+                interpretation=self.interpretation)
+        elif self.scheme == "afl":
+            self.global_params = aggregation.afl_update(
+                self.global_params, local_params, self.p.beta)
+        elif self.scheme == "fedasync":
+            staleness = max(time - download_time, 0.0)
+            self.global_params = aggregation.fedasync_update(
+                self.global_params, local_params, self._fedasync_mix,
+                staleness)
+        elif self.scheme == "fedbuff":
+            self.global_params, _ = self._fedbuff.add(
+                self.global_params, local_params)
+        else:
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+        rec = RoundRecord(self._round, time, vehicle, upload_delay,
+                          train_delay, weight)
+        self.rounds.append(rec)
+        self._last_update_time = time
+        return rec
+
+    @property
+    def round(self) -> int:
+        return self._round

@@ -1,0 +1,34 @@
+"""The paper's delay weights (Eqs. 7, 9) and the weighted local model (Eq. 10).
+
+beta_u = gamma ** (C_u - 1)     -- uploading-delay weight (mobility/channel)
+beta_l = zeta  ** (C_l - 1)     -- training-delay weight (data/compute)
+w_up   = w_local * beta_u * beta_l
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.channel.params import ChannelParams
+
+
+def upload_weight(p: ChannelParams, upload_delay: float) -> float:
+    """Eq. (7)."""
+    return float(p.gamma ** (upload_delay - 1.0))
+
+
+def training_weight(p: ChannelParams, train_delay: float) -> float:
+    """Eq. (9)."""
+    return float(p.zeta ** (train_delay - 1.0))
+
+
+def combined_weight(p: ChannelParams, upload_delay: float,
+                    train_delay: float) -> float:
+    return upload_weight(p, upload_delay) * training_weight(p, train_delay)
+
+
+def weighted_local_model(local_params, weight: float):
+    """Eq. (10): scale the whole local pytree by the scalar weight."""
+    w = jnp.float32(weight)
+    return jax.tree_util.tree_map(
+        lambda a: (a.astype(jnp.float32) * w).astype(a.dtype), local_params)

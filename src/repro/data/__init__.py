@@ -1,0 +1,6 @@
+from repro.data.synthetic import synth_mnist, synth_tokens
+from repro.data.partition import partition_vehicles
+from repro.data.pipeline import TokenPipeline
+
+__all__ = ["synth_mnist", "synth_tokens", "partition_vehicles",
+           "TokenPipeline"]

@@ -1,0 +1,28 @@
+"""Token-stream pipeline for the transformer training driver: deterministic
+shard-per-host batching with prefetch, emitting global batches that the
+launcher shards over the ``data`` mesh axis."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class TokenPipeline:
+    """Infinite iterator of (tokens [B, S+1]) next-token-prediction batches."""
+
+    def __init__(self, corpus: np.ndarray, batch: int, seq_len: int,
+                 seed: int = 0):
+        assert corpus.ndim == 2 and corpus.shape[1] >= seq_len + 1
+        self.corpus = corpus
+        self.batch = batch
+        self.seq_len = seq_len
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> np.ndarray:
+        rows = self.rng.integers(0, len(self.corpus), self.batch)
+        starts = self.rng.integers(
+            0, self.corpus.shape[1] - self.seq_len, self.batch)
+        return np.stack([self.corpus[r, s:s + self.seq_len + 1]
+                         for r, s in zip(rows, starts)])

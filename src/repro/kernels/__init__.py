@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots this system optimizes:
+
+  weighted_agg   — the paper's fused Eq.(10)+(11) aggregation pass: the RSU
+                   update is a pure HBM-streaming op over the full parameter
+                   pytree (memory-roofline-bound at 12B-405B params).
+  cross_entropy  — Eq.(1) loss over 100k-200k vocabularies, vocab-tiled
+                   online-softmax (avoids materializing log-probs).
+  swa_attention  — sliding-window flash-style attention forward for the
+                   long_500k-legal dense variant (mistral-nemo SWA).
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with interpret fallback), ref.py (pure-jnp oracle).  CPU validation
+runs interpret=True; compiled TPU lowering is the deployment target.
+"""

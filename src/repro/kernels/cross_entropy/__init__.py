@@ -1,0 +1,1 @@
+from repro.kernels.cross_entropy import kernel, ops, ref  # noqa: F401

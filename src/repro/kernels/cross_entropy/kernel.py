@@ -1,0 +1,84 @@
+"""Vocab-tiled online-softmax cross-entropy (Eq. 1) Pallas kernel.
+
+For 100k-200k vocabularies the naive log-softmax materializes [R, V] logprobs
+in HBM; this kernel streams vocab tiles through VMEM keeping only the running
+(max, sumexp, label-logit) statistics per row — the flash-softmax recurrence:
+
+    m' = max(m, max(tile));  s' = s*exp(m-m') + sum(exp(tile-m'))
+    nll = log(s_final) + m_final - logit[label]
+
+Grid: (row_blocks, vocab_blocks); vocab is the innermost (fastest) axis so
+each row block's statistics live in VMEM scratch across its vocab sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_R = 128
+DEFAULT_BLOCK_V = 2048
+NEG_INF = -1e30
+
+
+def _ce_kernel(labels_ref, logits_ref, out_ref, m_ref, s_ref, c_ref,
+               *, block_v: int, n_v_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        c_ref[...] = jnp.full_like(c_ref, NEG_INF)
+
+    tile = logits_ref[...].astype(jnp.float32)            # [br, bv]
+    m_prev = m_ref[...]                                   # [br]
+    m_new = jnp.maximum(m_prev, jnp.max(tile, axis=-1))
+    scale = jnp.exp(m_prev - m_new)
+    s_ref[...] = s_ref[...] * scale + jnp.sum(
+        jnp.exp(tile - m_new[:, None]), axis=-1)
+    m_ref[...] = m_new
+
+    # pick out the label logit if it falls inside this vocab tile
+    labels = labels_ref[...]                              # [br] int32
+    local = labels - j * block_v
+    cols = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    hit = cols == local[:, None]
+    c_ref[...] = jnp.maximum(c_ref[...],
+                             jnp.max(jnp.where(hit, tile, NEG_INF), axis=-1))
+
+    @pl.when(j == n_v_blocks - 1)
+    def _finish():
+        out_ref[...] = jnp.log(s_ref[...]) + m_ref[...] - c_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_r", "block_v", "interpret"))
+def cross_entropy_tiled(logits, labels, *, block_r=DEFAULT_BLOCK_R,
+                        block_v=DEFAULT_BLOCK_V, interpret=True):
+    """logits [R, V] (V % block_v == 0, R % block_r == 0), labels [R] int32
+    -> per-row NLL [R] f32."""
+    R, V = logits.shape
+    br, bv = min(block_r, R), min(block_v, V)
+    assert R % br == 0 and V % bv == 0, (R, V, br, bv)
+    n_v = V // bv
+    kernel = functools.partial(_ce_kernel, block_v=bv, n_v_blocks=n_v)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // br, n_v),
+        in_specs=[
+            pl.BlockSpec((br,), lambda i, j: (i,)),       # labels
+            pl.BlockSpec((br, bv), lambda i, j: (i, j)),  # logits tile
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((br,), jnp.float32),   # running max  m
+            pltpu.VMEM((br,), jnp.float32),   # running sumexp s
+            pltpu.VMEM((br,), jnp.float32),   # label logit  c
+        ],
+        interpret=interpret,
+    )(labels, logits)

@@ -1,0 +1,41 @@
+"""Public wrapper: pads rows/vocab to tile multiples, restores shape, and
+offers the mean-reduced LM loss used by the training driver."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cross_entropy import ref
+from repro.kernels.cross_entropy.kernel import (DEFAULT_BLOCK_R,
+                                                DEFAULT_BLOCK_V,
+                                                cross_entropy_tiled)
+
+
+def cross_entropy(logits, labels, *, interpret=True):
+    """logits [R, V], labels [R] -> per-row NLL [R] f32 (pads as needed)."""
+    R, V = logits.shape
+    br = min(DEFAULT_BLOCK_R, max(8, 1 << (R - 1).bit_length()))
+    bv = min(DEFAULT_BLOCK_V, V)
+    padR = (-R) % br
+    padV = (-V) % bv
+    if padV:
+        logits = jnp.pad(logits, ((0, 0), (0, padV)),
+                         constant_values=-1e30)
+    if padR:
+        logits = jnp.pad(logits, ((0, padR), (0, 0)))
+        labels = jnp.pad(labels, (0, padR))
+    out = cross_entropy_tiled(logits, labels, block_r=br,
+                              block_v=bv, interpret=interpret)
+    return out[:R]
+
+
+def lm_loss(logits, targets, *, interpret=True, use_kernel=True):
+    """Mean next-token NLL for [B, S, V] logits vs [B, S] targets."""
+    B, S, V = logits.shape
+    flat_l = logits.reshape(B * S, V)
+    flat_t = targets.reshape(B * S)
+    if use_kernel:
+        nll = cross_entropy(flat_l, flat_t, interpret=interpret)
+    else:
+        nll = ref.cross_entropy(flat_l, flat_t)
+    return jnp.mean(nll)

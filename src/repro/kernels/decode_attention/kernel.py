@@ -1,0 +1,85 @@
+"""Fused one-token GQA decode-attention kernel (the decode_32k hot-spot).
+
+Decode is KV-cache-streaming-bound (EXPERIMENTS.md §Roofline): the kernel
+streams [block_s, hd] cache tiles through VMEM once, keeping the online
+softmax state (m, s, acc) for all G grouped query heads in scratch — one
+HBM pass over the cache per step, no [S]-sized intermediates.
+
+Grid: (B * Kv, S / block_s); the G query heads sharing one KV head ride in
+the block's leading dim so the MXU sees [G, hd] x [hd, block_s] matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, s_ref,
+                   acc_ref, *, block_s: int, n_blocks: int, scale: float):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0, 0]
+    q = q_ref[0].astype(jnp.float32) * scale              # [G, hd]
+    k = k_ref[0].astype(jnp.float32)                      # [bs, hd]
+    scores = q @ k.T                                      # [G, bs]
+    idx = si * block_s + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(idx <= pos, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    s_ref[...] = s_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        p @ v_ref[0].astype(jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == n_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(s_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_bkv(q, k, v, pos, *, block_s: int = 512,
+                         interpret: bool = True):
+    """q: [BKv, G, hd]; k, v: [BKv, S, hd]; pos: i32[1,1] scalar block.
+    Returns [BKv, G, hd]."""
+    BKv, G, hd = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    assert S % bs == 0
+    n_blocks = S // bs
+    kern = functools.partial(_decode_kernel, block_s=bs, n_blocks=n_blocks,
+                             scale=1.0 / np.sqrt(hd))
+    return pl.pallas_call(
+        kern,
+        grid=(BKv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, s: (0, 0)),    # pos scalar
+            pl.BlockSpec((1, G, hd), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, bs, hd), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, bs, hd), lambda b, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q, k, v)

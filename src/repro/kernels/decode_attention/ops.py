@@ -1,0 +1,21 @@
+"""Public wrapper: [B, H, hd] query + [B, S, Kv, hd] cache -> kernel layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_bkv
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_s: int = 512,
+                     interpret: bool = True):
+    """q: [B, H, hd]; caches [B, S, Kv, hd]; pos scalar int."""
+    B, H, hd = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    qf = q.reshape(B, Kv, G, hd).reshape(B * Kv, G, hd)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+    posb = jnp.full((1, 1), pos, jnp.int32)
+    out = decode_attention_bkv(qf, kf, vf, posb, block_s=block_s,
+                               interpret=interpret)
+    return out.reshape(B, Kv, G, hd).reshape(B, H, hd)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: one-token GQA attention against a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """q: [B, H, hd] (one new token, already rotary-encoded);
+    k_cache/v_cache: [B, S, Kv, hd] with entries > pos invalid.
+    Returns [B, H, hd]."""
+    B, H, hd = q.shape
+    Kv = k_cache.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    ok = jnp.arange(k_cache.shape[1]) <= pos
+    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, v_cache)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,109 @@
+"""Sliding-window flash-attention forward kernel (TPU-adapted).
+
+TPU adaptation of the paper-agnostic SWA hot-spot (DESIGN.md §2): instead of
+a GPU warp-tiled kernel, blocks are sized for VMEM/MXU — (block_q x hd) query
+tiles stream (block_k x hd) KV tiles whose *block index is derived from the
+query block*, so only ceil(W/bk)+1 KV tiles are touched per query tile: the
+O(S*W) (not O(S^2)) schedule is structural, enforced by the BlockSpec index
+maps.  GQA is folded into the index maps (kv head = q head // group).
+
+Running-softmax state (m, s, acc) lives in VMEM scratch across the kv sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, s_ref, acc_ref, *,
+                block_q: int, block_k: int, window: int, n_kv: int,
+                scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute start of the kv block this step touches (see index_map)
+    # highest kv block needed by this q tile is its own last column block;
+    # the sweep walks the n_kv blocks ending there (negative kb => masked)
+    kb = qi * (block_q // block_k) + (block_q // block_k - 1) - \
+        (n_kv - 1) + ki
+    q = q_ref[0].astype(jnp.float32) * scale              # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                      # [bk, hd]
+    scores = q @ k.T                                      # [bq, bk]
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    ok = (kpos <= qpos) & (qpos - kpos < window) & (kb >= 0)
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    s_ref[...] = s_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        p @ v_ref[0].astype(jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(s_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def swa_attention_bhsd(q, k, v, *, window: int, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = True):
+    """q: [BH, S, hd]; k, v: [BKv, S, hd]; BH = B*H, BKv = B*Kv.
+    Requires S % block == 0 and window % block_k == 0."""
+    BH, S, hd = q.shape
+    BKv = k.shape[0]
+    G = BH // BKv
+    bq, bk = min(block_q, S), min(block_k, S)
+    assert S % bq == 0 and S % bk == 0
+    assert bq % bk == 0, "block_q must be a multiple of block_k"
+    # blocks per q-tile sweep: the q tile spans bq/bk column blocks, plus the
+    # window reaches back ceil((W-1)/bk) more (negative ids are masked out)
+    n_kv = bq // bk + -(-(window - 1) // bk)
+    scale = 1.0 / np.sqrt(hd)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        kb = qi * (bq // bk) + (bq // bk - 1) - (n_kv - 1) + ki
+        kb = jnp.clip(kb, 0, S // bk - 1)
+        return (bh // G, kb, 0)
+
+    kernel = functools.partial(_swa_kernel, block_q=bq, block_k=bk,
+                               window=window, n_kv=n_kv, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), q_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""Public wrapper: [B, S, H, hd] GQA layout -> kernel layout and back."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention.kernel import swa_attention_bhsd
+
+
+def swa_attention(q, k, v, window: int, *, block_q: int = 128,
+                  block_k: int = 128, interpret: bool = True):
+    """q: [B, S, H, hd]; k, v: [B, S, Kv, hd] -> [B, S, H, hd]."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+    out = swa_attention_bhsd(qf, kf, vf, window=window, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: causal sliding-window attention (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def swa_attention(q, k, v, window: int):
+    """q: [B, S, H, hd]; k, v: [B, S, Kv, hd]; H % Kv == 0.
+    Causal, attends only to the last ``window`` positions (inclusive of
+    self).  Returns [B, S, H, hd]."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    pos = jnp.arange(S)
+    ok = (pos[None, :] <= pos[:, None]) & \
+         (pos[:, None] - pos[None, :] < window)
+    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H, hd)

@@ -1,0 +1,1 @@
+from repro.kernels.weighted_agg import kernel, ops, ref  # noqa: F401

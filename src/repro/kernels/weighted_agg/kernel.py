@@ -1,0 +1,48 @@
+"""Fused MAFL aggregation kernel (Eq. 10 + Eq. 11):
+
+    out = beta * w_global + (1 - beta) * weight * w_local
+
+One HBM read of each operand, one write — the minimal-traffic form of the
+RSU update (it is memory-roofline-bound; arithmetic intensity ~3 flops /
+6 bytes).  Arrays are processed as flat (rows, 128) lane-aligned tiles; the
+two scalar coefficients ride along as a tiny replicated block so a single
+compiled kernel serves every round / every leaf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+DEFAULT_BLOCK_ROWS = 256        # 256 x 128 x 4B = 128 KiB per operand tile
+
+
+def _agg_kernel(scal_ref, g_ref, l_ref, o_ref):
+    beta = scal_ref[0, 0]
+    weight = scal_ref[0, 1]
+    g = g_ref[...].astype(jnp.float32)
+    l = l_ref[...].astype(jnp.float32)
+    o_ref[...] = (beta * g + (1.0 - beta) * weight * l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def weighted_agg_2d(g, l, scalars, *, block_rows=DEFAULT_BLOCK_ROWS,
+                    interpret=True):
+    """g, l: [R, 128] same dtype; scalars: f32[1, 2] = (beta, weight)."""
+    R = g.shape[0]
+    br = min(block_rows, R)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(pl.cdiv(R, br),),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),      # scalars, replicated
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=interpret,
+    )(scalars, g, l)

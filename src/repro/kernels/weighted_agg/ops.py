@@ -1,0 +1,41 @@
+"""Jit'd public wrapper: applies the fused aggregation kernel to arbitrary
+pytrees by flattening every leaf into lane-aligned (R, 128) tiles.
+
+On this CPU container the kernel body executes via interpret=True; on TPU the
+same ``pallas_call`` compiles to a VMEM-tiled streaming kernel.  Leaves too
+small to tile (< 128 elements) fall through to the jnp oracle — the traffic
+they contribute is negligible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.weighted_agg import ref
+from repro.kernels.weighted_agg.kernel import LANE, weighted_agg_2d
+
+
+def weighted_agg_leaf(g, l, beta: float, weight: float, interpret=True):
+    if g.size < LANE:
+        return ref.weighted_agg(g, l, beta, weight)
+    scalars = jnp.asarray([[beta, weight]], jnp.float32)
+    n = g.size
+    rows = n // LANE
+    main = rows * LANE
+    gf, lf = g.reshape(-1), l.reshape(-1)
+    out_main = weighted_agg_2d(gf[:main].reshape(rows, LANE),
+                               lf[:main].reshape(rows, LANE), scalars,
+                               interpret=interpret).reshape(-1)
+    if main == n:
+        return out_main.reshape(g.shape)
+    tail = ref.weighted_agg(gf[main:], lf[main:], beta, weight)
+    return jnp.concatenate([out_main, tail]).reshape(g.shape)
+
+
+def weighted_agg_tree(global_params, local_params, beta: float,
+                      weight: float, interpret=True):
+    """Drop-in for ``aggregation.mafl_update(..., use_kernel=True)``."""
+    return jax.tree_util.tree_map(
+        lambda g, l: weighted_agg_leaf(g, l, beta, weight, interpret),
+        global_params, local_params)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused aggregation (Eqs. 10-11)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_agg(g, l, beta: float, weight: float):
+    """out = beta*g + (1-beta)*weight*l, computed in f32, cast back."""
+    b = jnp.float32(beta)
+    w = jnp.float32(weight)
+    return (b * g.astype(jnp.float32) +
+            (1.0 - b) * w * l.astype(jnp.float32)).astype(g.dtype)
+
+
+def weighted_agg_tree(global_params, local_params, beta: float,
+                      weight: float):
+    return jax.tree_util.tree_map(
+        lambda g, l: weighted_agg(g, l, beta, weight), global_params,
+        local_params)

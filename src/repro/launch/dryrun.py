@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init) — see the brief's MULTI-POD DRY-RUN §0.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config, get_shape, legal_shapes, list_archs  # noqa: E402
+from repro.configs.shapes import DECODE, PREFILL, TRAIN  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.transformer import param_count  # noqa: E402
+from repro.roofline import parse_hlo_module  # noqa: E402
+from repro.roofline.analysis import model_flops_estimate, roofline_terms  # noqa: E402
+from repro.sharding import batch_spec, cache_specs, param_specs  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results")
+
+
+# Production memory knobs per arch for the TRAIN shape: grad-accumulation
+# splits + activation sharding (DESIGN.md §5).  Tuned so each train step's
+# per-device residency fits 16 GB v5e HBM (see EXPERIMENTS.md §Dry-run).
+TRAIN_OVERRIDES = {
+    # batch-anchored activation sharding (see transformer._maybe_shard_h)
+    # + grad-accumulation splits, tuned per EXPERIMENTS.md §Perf so every
+    # train step except llama3-405b fits 16 GB v5e HBM.
+    "llama3-405b": dict(microbatches=4, shard_activations=True,
+                        grad_accum_dtype="bfloat16"),
+    "llama4-scout-17b-a16e": dict(microbatches=16, remat_sublayer=True,
+                                  shard_activations=True,
+                                  grad_accum_dtype="bfloat16"),
+    "jamba-v0.1-52b": dict(microbatches=16, shard_activations=True,
+                           grad_accum_dtype="bfloat16", remat_sublayer=True),
+    "mistral-nemo-12b": dict(microbatches=8, shard_activations=True),
+    "deepseek-v2-lite-16b": dict(microbatches=16, remat_sublayer=True,
+                                 shard_activations=True),
+    "qwen1.5-4b": dict(microbatches=8, shard_activations=True),
+    "musicgen-large": dict(microbatches=4, shard_activations=True),
+    "internvl2-2b": dict(microbatches=4, shard_activations=True),
+    "rwkv6-1.6b": dict(microbatches=2),
+    "smollm-360m": dict(microbatches=2),
+}
+
+
+def arch_for(arch: str, shape_name: str):
+    """Arch config, applying long-context and train-memory variants."""
+    if arch == "mistral-nemo-12b" and shape_name == "long_500k":
+        from repro.configs.mistral_nemo_12b import sliding_window_variant
+        cfg = sliding_window_variant()
+    else:
+        cfg = get_config(arch)
+    if shape_name == "train_4k" and arch in TRAIN_OVERRIDES:
+        cfg = cfg.variant(**TRAIN_OVERRIDES[arch])
+    if cfg.vocab_size % 256:
+        # pad the vocab to a shardable multiple (standard production
+        # practice; the model card's tokenizer ids are unaffected) so the
+        # embedding/lm_head shard over the 16-way model axis.
+        cfg = cfg.variant(vocab_size=-(-cfg.vocab_size // 256) * 256)
+    return cfg
+
+
+def lower_one(cfg, shape, mesh, mesh_name: str, extra_opts=None):
+    """Lower + compile one (arch, shape, mesh) and return the record dict."""
+    opts = extra_opts or {}
+    dtype = jnp.bfloat16
+    pspecs = param_specs(cfg, mesh, fsdp=opts.get("fsdp"))
+    psh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+    pshapes = steps_mod.param_shapes(cfg, dtype)
+    specs = steps_mod.input_specs(cfg, shape, dtype)
+    t0 = time.time()
+    ctx = jax.set_mesh(mesh)
+    ctx.__enter__()
+
+    if opts.get("dp_over_model"):
+        pspecs = jax.tree_util.tree_map(
+            lambda s: type(s)(*([None] * len(s))), pspecs)
+        psh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                     pspecs)
+
+    def batch_spec_fn(m, b):
+        if opts.get("dp_over_model"):
+            axes = tuple(m.axis_names)
+            return P(axes)
+        return batch_spec(m, b)
+
+    if shape.kind == TRAIN:
+        gspecs = None if opts.get("no_grad_specs") else pspecs
+        step = steps_mod.make_train_step(cfg, grad_specs=gspecs)
+        bspec = batch_spec_fn(mesh, shape.global_batch)
+        bsh = {"tokens": NamedSharding(mesh, P(*bspec))}
+        if "patch_embeds" in specs:
+            bsh["patch_embeds"] = NamedSharding(mesh, P(*bspec, None, None))
+        fn = jax.jit(step, in_shardings=(psh, bsh),
+                     out_shardings=(psh, None), donate_argnums=(0,))
+        lowered = fn.lower(pshapes, specs)
+    elif shape.kind == PREFILL:
+        step = steps_mod.make_prefill_step(cfg)
+        bspec = batch_spec_fn(mesh, shape.global_batch)
+        bsh = {"tokens": NamedSharding(mesh, P(*bspec))}
+        if "patch_embeds" in specs:
+            bsh["patch_embeds"] = NamedSharding(mesh, P(*bspec, None, None))
+        csh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            cache_specs(cfg, mesh, shape.global_batch, shape.seq_len))
+        fn = jax.jit(step, in_shardings=(psh, bsh),
+                     out_shardings=(None, csh))
+        lowered = fn.lower(pshapes, specs)
+    else:
+        assert shape.kind == DECODE
+        step = steps_mod.make_serve_step(cfg)
+        bspec = batch_spec_fn(mesh, shape.global_batch)
+        csh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            cache_specs(cfg, mesh, shape.global_batch, shape.seq_len))
+        tsh = NamedSharding(mesh, P(*bspec))
+        fn = jax.jit(step, in_shardings=(psh, tsh, csh, None),
+                     out_shardings=(tsh, csh), donate_argnums=(2,))
+        lowered = fn.lower(pshapes, specs["token"], specs["cache"],
+                           specs["pos"])
+
+    compiled = lowered.compile()
+    ctx.__exit__(None, None, None)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = parse_hlo_module(compiled.as_text())
+    n_chips = mesh.devices.size
+    terms = roofline_terms(
+        arch=cfg.name, shape=shape.name, mesh_name=mesh_name,
+        n_chips=n_chips, hlo_stats=hlo, memory_stats=mem,
+        cost_flops=float(cost.get("flops", 0.0)),
+        model_flops=model_flops_estimate(cfg, shape),
+        tokens=shape.tokens)
+    rec = terms.to_dict()
+    rec.update(
+        n_chips=n_chips,
+        param_count=param_count(cfg),
+        param_count_active=param_count(cfg, active_only=True),
+        argument_bytes=mem.argument_size_in_bytes,
+        output_bytes=mem.output_size_in_bytes,
+        temp_bytes=mem.temp_size_in_bytes,
+        compile_seconds=round(t_compile, 1),
+        while_trips=hlo.while_trips,
+    )
+    return rec
+
+
+def mafl_agg_record(cfg, mesh, mesh_name: str):
+    """Lower the RSU aggregation (Eq. 10+11) over the full param pytree —
+    the paper's technique as its own program."""
+    dtype = jnp.bfloat16
+    pspecs = param_specs(cfg, mesh)
+    psh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+    pshapes = steps_mod.param_shapes(cfg, dtype)
+    scal = jax.ShapeDtypeStruct((), jnp.float32)
+    step = steps_mod.make_mafl_step(cfg)
+    t0 = time.time()
+    compiled = jax.jit(step, in_shardings=(psh, psh, None, None),
+                       out_shardings=psh,
+                       donate_argnums=(0,)).lower(pshapes, pshapes, scal,
+                                                  scal).compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = parse_hlo_module(compiled.as_text())
+
+    class _Shape:
+        name, kind, tokens, global_batch, seq_len = "mafl_agg", "agg", 0, 0, 0
+    terms = roofline_terms(
+        arch=cfg.name, shape="mafl_agg", mesh_name=mesh_name,
+        n_chips=mesh.devices.size, hlo_stats=hlo, memory_stats=mem,
+        cost_flops=float(cost.get("flops", 0.0)),
+        model_flops=3.0 * param_count(cfg),   # 3 flops per param (Eq. 10+11)
+        tokens=0)
+    rec = terms.to_dict()
+    rec.update(n_chips=mesh.devices.size, param_count=param_count(cfg),
+               compile_seconds=round(time.time() - t0, 1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run matrix")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--mafl-agg", action="store_true",
+                    help="also lower the MAFL aggregation step per arch")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fsdp", default=None,
+                    help="override FSDP auto-rule: on|off")
+    ap.add_argument("--override", default="",
+                    help="cfg variant overrides, e.g. "
+                         "'microbatches=8,mla_absorb=True'")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output record filename")
+    ap.add_argument("--no-grad-specs", action="store_true",
+                    help="disable the grad reduce-scatter constraint")
+    ap.add_argument("--dp-over-model", action="store_true",
+                    help="shard the batch over BOTH mesh axes (pure data "
+                         "parallel; params replicated)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    fsdp = {None: None, "on": True, "off": False}[args.fsdp]
+
+    for multi_pod in meshes:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            base_cfg = get_config(arch)
+            shapes = (legal_shapes(base_cfg) if args.shape == "all"
+                      else args.shape.split(","))
+            if arch == "mistral-nemo-12b" and args.shape == "all":
+                shapes = shapes + ["long_500k"]   # via the SWA variant
+            for shape_name in shapes:
+                tag = f"_{args.tag}" if args.tag else ""
+                out_path = os.path.join(
+                    args.out,
+                    f"dryrun_{arch}_{shape_name}_{mesh_name}{tag}.json")
+                if os.path.exists(out_path) and not args.force:
+                    print(f"skip {out_path} (exists)")
+                    continue
+                cfg = arch_for(arch, shape_name)
+                if args.override:
+                    kw = {}
+                    for kv in args.override.split(","):
+                        k, v = kv.split("=")
+                        kw[k] = {"True": True, "False": False}.get(
+                            v, int(v) if v.isdigit() else v)
+                    cfg = cfg.variant(**kw)
+                shape = get_shape(shape_name)
+                print(f"[{mesh_name}] {arch} x {shape_name} ...", flush=True)
+                try:
+                    rec = lower_one(cfg, shape, mesh, mesh_name,
+                                    {"fsdp": fsdp,
+                                     "dp_over_model": args.dp_over_model,
+                                     "no_grad_specs": args.no_grad_specs})
+                    with open(out_path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"  ok: flops/dev={rec['flops_per_device']:.3e} "
+                          f"coll={rec['collective_bytes_per_device']:.3e} "
+                          f"bottleneck={rec['bottleneck']} "
+                          f"fits={rec['fits_hbm']} "
+                          f"({rec['compile_seconds']}s)", flush=True)
+                except Exception as e:
+                    print(f"  FAIL: {e}")
+                    traceback.print_exc()
+            if args.mafl_agg:
+                out_path = os.path.join(
+                    args.out, f"dryrun_{arch}_mafl-agg_{mesh_name}.json")
+                if os.path.exists(out_path) and not args.force:
+                    continue
+                try:
+                    rec = mafl_agg_record(get_config(arch), mesh, mesh_name)
+                    with open(out_path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"  mafl-agg ok ({rec['compile_seconds']}s)",
+                          flush=True)
+                except Exception as e:
+                    print(f"  mafl-agg FAIL: {e}")
+
+
+if __name__ == "__main__":
+    main()

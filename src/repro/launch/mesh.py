@@ -1,0 +1,21 @@
+"""Production meshes (DESIGN.md §5).
+
+Built inside functions so importing this module never touches jax device
+state; only ``launch/dryrun.py`` forces the 512-placeholder-device platform.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16,16) ("data","model") = 256 chips (v5e pod).
+    Multi-pod: (2,16,16) ("pod","data","model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for smoke tests on the real CPU device."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,215 @@
+"""jit-able train / prefill / serve steps + ``input_specs`` for every
+(arch x input-shape) combination.
+
+``train_step`` is paper-faithful plain SGD (Eq. 2) over the mean next-token
+cross-entropy (Eq. 1) + MoE aux loss.  ``serve_step`` decodes ONE token
+against a ``seq_len`` KV cache (the decode shapes' contract).  ``mafl_step``
+is the RSU aggregation (Eq. 10+11) as its own lowered program — the paper's
+technique at datacenter scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import DECODE, InputShape, PREFILL, TRAIN
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, lr: float = 1e-2, grad_specs=None):
+    """(params, batch) -> (params, metrics).  batch: {'tokens': [B, S+1]}
+    (+ 'patch_embeds' for vlm).  Plain SGD per the paper's Eq. (2).
+
+    ``cfg.microbatches > 1`` runs grad accumulation over batch splits
+    (scanned) — the production memory knob for deep models whose per-pass
+    activations would not fit HBM otherwise.
+
+    ``grad_specs`` (pytree of PartitionSpec matching params): constrains
+    per-microbatch grads to the FSDP param sharding so GSPMD emits
+    reduce-scatter into the sharded accumulator instead of a full
+    all-reduce per layer per microbatch (≈3x collective traffic on
+    llama3-405b — EXPERIMENTS.md §Perf)."""
+    P = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+
+    def constrain(g):
+        if grad_specs is None:
+            return g
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), g,
+            grad_specs)
+
+    # Vocab-chunked CE helps ONLY when the lm_head cannot shard (odd vocab):
+    # with a model-sharded head, XLA keeps [B,S,V/16] logit shards, which
+    # beats replicated [B,S,chunk] tiles (measured — EXPERIMENTS.md §Perf).
+    # The dry-run pads vocabs to shardable sizes, so this is opt-in.
+    chunk = cfg.loss_chunk
+
+    def loss_fn(p, mb):
+        if not chunk:
+            logits, aux = T.forward(cfg, p, mb["inputs"],
+                                    mb.get("patch_embeds"))
+            logits = logits[:, P:, :]                     # text positions
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(logp, mb["targets"][..., None], -1)
+            return jnp.mean(nll) + aux.astype(jnp.float32)
+        h, aux = T.forward_hidden(cfg, p, mb["inputs"],
+                                  mb.get("patch_embeds"))
+        nll = _chunked_nll(cfg, p, h[:, P:, :], mb["targets"], chunk)
+        return jnp.mean(nll) + aux.astype(jnp.float32)
+
+    def train_step(params, batch):
+        tokens = batch["tokens"]
+        mb = {"inputs": tokens[:, :-1], "targets": tokens[:, 1:]}
+        if "patch_embeds" in batch:
+            mb["patch_embeds"] = batch["patch_embeds"]
+        M = cfg.microbatches
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        else:
+            acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+            splits = jax.tree_util.tree_map(
+                lambda a: a.reshape(M, a.shape[0] // M, *a.shape[1:]), mb)
+
+            def mb_body(carry, mb_i):
+                acc, loss_acc = carry
+                loss_i, g_i = jax.value_and_grad(loss_fn)(params, mb_i)
+                g_i = constrain(g_i)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(acc_dt), acc, g_i)
+                return (acc, loss_acc + loss_i), None
+
+            zeros = constrain(jax.tree_util.tree_map(
+                lambda w: jnp.zeros(w.shape, acc_dt), params))
+            (grads, loss), _ = jax.lax.scan(
+                mb_body, (zeros, jnp.zeros((), jnp.float32)), splits)
+            grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+            loss = loss / M
+        new_params = jax.tree_util.tree_map(
+            lambda w, g: (w.astype(jnp.float32) -
+                          lr * g.astype(jnp.float32)).astype(w.dtype),
+            params, grads)
+        return new_params, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, cache = T.prefill(cfg, params, batch["tokens"],
+                                  batch.get("patch_embeds"))
+        return logits[:, -1:, :], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """ONE new token against a pre-filled cache (decode shapes)."""
+
+    def serve_step(params, token, cache, pos):
+        logits, new_cache = T.decode_step(cfg, params, token, cache, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return serve_step
+
+
+def make_mafl_step(cfg: ArchConfig):
+    """RSU aggregation (Eq. 10+11) over the full parameter pytree, with the
+    scalar weights as traced inputs (one compiled program serves all rounds).
+    """
+
+    def mafl_step(global_params, local_params, beta, weight):
+        b = beta.astype(jnp.float32)
+        w = weight.astype(jnp.float32)
+        return jax.tree_util.tree_map(
+            lambda g, l: (b * g.astype(jnp.float32) + (1 - b) * w *
+                          l.astype(jnp.float32)).astype(g.dtype),
+            global_params, local_params)
+
+    return mafl_step
+
+
+def _chunked_nll(cfg, params, h, targets, chunk):
+    """Vocab-chunked flash-CE (jnp mirror of ``kernels/cross_entropy``):
+    streams [B,S,chunk] logit tiles keeping only running (max, sumexp,
+    label-logit) per position — never materializes [B,S,V] logits.  The
+    Pallas kernel is the TPU-target form of the same recurrence."""
+    W = T.head_weight(cfg, params)                         # [d, V]
+    V = cfg.vocab_size
+    n_chunks = -(-V // chunk)
+    padV = n_chunks * chunk - V
+    if padV:
+        W = jnp.pad(W, ((0, 0), (0, padV)))
+    B, S, _ = h.shape
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    s0 = jnp.zeros((B, S), jnp.float32)
+    c0 = jnp.full((B, S), -1e30, jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, i):
+        m, s, c = carry
+        W_c = jax.lax.dynamic_slice_in_dim(W, i * chunk, chunk, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", h, W_c).astype(jnp.float32)
+        idx = i * chunk + jnp.arange(chunk)
+        logits = jnp.where(idx < V, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[..., None]).sum(-1)
+        local = targets - i * chunk
+        hit = (local >= 0) & (local < chunk)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, chunk - 1)[..., None], -1)[..., 0]
+        c = jnp.where(hit, picked, c)
+        return (m_new, s, c), None
+
+    (m, s, c), _ = jax.lax.scan(body, (m0, s0, c0), jnp.arange(n_chunks))
+    return jnp.log(s) + m - c
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — never allocated)
+# ---------------------------------------------------------------------------
+def param_shapes(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(T.init_params, cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq_len: int,
+                 dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, seq_len, dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """Model inputs for the given shape, as ShapeDtypeStructs.
+
+    train/prefill: {'tokens': [B, S(+1 train)]} (+ patch embeds for vlm;
+    text seq shortened so frontend + text == seq_len).
+    decode: (token [B,1], cache(seq_len), pos scalar)."""
+    B, S = shape.global_batch, shape.seq_len
+    P = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    if shape.kind == TRAIN:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S - P + 1), jnp.int32)}
+        if P:
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                         dtype)
+        return batch
+    if shape.kind == PREFILL:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32)}
+        if P:
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                         dtype)
+        return batch
+    assert shape.kind == DECODE
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache_shapes(cfg, B, S, dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,1 @@
+from repro.models import transformer, cnn, frontends  # noqa: F401

@@ -1,0 +1,340 @@
+"""Softmax attention family: GQA/MHA (+ RoPE, QKV bias, sliding-window,
+chunked-local) and DeepSeek MLA (compressed-KV latent attention, with both
+naive and absorbed decode).
+
+Cache layouts (per layer; the transformer stacks a leading period axis):
+  full/global : k,v  [B, S, Kv, hd]        (S = max context)
+  swa         : k,v  [B, W, Kv, hd]        ring buffer over the window
+  chunk       : k,v  [B, C, Kv, hd]        current local chunk only
+  mla         : c_kv [B, S, lora], k_rope [B, S, rope_dim]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (MIXER_ATTN, MIXER_ATTN_GLOBAL)
+from repro.models.modules import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def mask_spec_for(cfg, mixer_kind):
+    """Resolve (mask_kind, width) for a sublayer's attention."""
+    if mixer_kind == MIXER_ATTN_GLOBAL:
+        return "full", 0
+    if cfg.sliding_window:
+        return "swa", cfg.sliding_window
+    if cfg.attn_chunk:
+        return "chunk", cfg.attn_chunk
+    return "full", 0
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def init_attention(cfg, key, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, (cfg.n_heads, hd), dtype),
+        "wk": dense_init(ks[1], cfg.d_model, (cfg.n_kv_heads, hd), dtype),
+        "wv": dense_init(ks[2], cfg.d_model, (cfg.n_kv_heads, hd), dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype,
+                         scale=1.0 / np.sqrt(cfg.n_heads * hd)).reshape(
+                             cfg.n_heads, hd, cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    return p
+
+
+def _qkv(cfg, p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _sdpa(q, k, v, bias):
+    """q:[B,Sq,H,hd] k,v:[B,Sk,Kv,hd] bias:[B or 1, 1, Sq, Sk] additive."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd) + bias[:, :, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _causal_bias(Sq, Sk, q_pos, k_pos, mask_kind, width):
+    """Additive bias [1, 1, Sq, Sk] from absolute positions."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = kp <= qp
+    if mask_kind == "swa":
+        ok &= (qp - kp) < width
+    elif mask_kind == "chunk":
+        ok &= (qp // width) == (kp // width)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    return bias[None, None]
+
+
+BLOCKED_SDPA_THRESHOLD = 1024   # S above which the q-blocked path is used
+SDPA_BLOCK_Q = 128
+
+
+def _sdpa_any(q, k, v, positions, mask_kind, width):
+    """Dense S x S scores for short sequences; q-blocked scan (flash-style
+    schedule, O(S * block_q) live scores) beyond BLOCKED_SDPA_THRESHOLD —
+    without it a 4k-32k training/prefill step materializes an [H, S, S] f32
+    scores tensor per layer (tens of GB/device)."""
+    S = q.shape[1]
+    if S <= BLOCKED_SDPA_THRESHOLD or S % SDPA_BLOCK_Q:
+        bias = _causal_bias(S, S, positions, positions, mask_kind, width)
+        return _sdpa(q, k, v, bias)
+    bq = SDPA_BLOCK_Q
+
+    @jax.checkpoint
+    def body(_, qi):
+        qs = qi * bq
+        qb = jax.lax.dynamic_slice_in_dim(q, qs, bq, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(positions, qs, bq)
+        bias = _causal_bias(bq, S, qpos, positions, mask_kind, width)
+        return None, _sdpa(qb, k, v, bias)
+
+    _, blocks = jax.lax.scan(body, None, jnp.arange(S // bq))
+    out = jnp.swapaxes(blocks, 0, 1)            # [B, nb, bq, H, hd]
+    return out.reshape(q.shape)
+
+
+def attention_fwd(cfg, p, x, positions, mask_kind="full", width=0):
+    """Full-sequence attention (train / prefill). Returns (y, cache_kv).
+
+    The returned cache is already in *decode layout*: full-S for full
+    attention, ring-of-W for swa, current-chunk for chunked (see
+    ``to_decode_layout``)."""
+    q, k, v = _qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    pos = positions[0] if positions.ndim > 1 else positions
+    out = _sdpa_any(q, k, v, pos, mask_kind, width)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": to_decode_layout(k, mask_kind, width),
+               "v": to_decode_layout(v, mask_kind, width)}
+
+
+def to_decode_layout(kv, mask_kind, width):
+    """Convert a [B, S, Kv, hd] prefilled tensor into the decode cache layout.
+
+    swa  : ring of the last ``width`` entries, entry for position p at p % W.
+    chunk: the in-progress local chunk (positions >= S - S%C), at p % C.
+    full : unchanged.
+    """
+    if mask_kind == "full":
+        return kv
+    B, S, Kv, hd = kv.shape
+    W = width
+    if mask_kind == "swa":
+        if S < W:
+            pad = jnp.zeros((B, W - S, Kv, hd), kv.dtype)
+            return jnp.concatenate([kv, pad], axis=1)  # slot p%W == p
+        block = kv[:, S - W:]                          # positions S-W .. S-1
+        return jnp.roll(block, S % W, axis=1)          # slot (S-W+i)%W
+    # chunk
+    filled = S % W
+    block = kv[:, S - filled:] if filled else kv[:, :0]
+    pad = jnp.zeros((B, W - filled, Kv, hd), kv.dtype)
+    return jnp.concatenate([block, pad], axis=1)
+
+
+def attention_decode(cfg, p, x, cache, pos, mask_kind="full", width=0):
+    """One-token decode. x:[B,1,d]; pos: scalar int32 OR per-sequence [B]
+    vector (continuous batching — full-attention path only).
+
+    Writes the new K/V into the cache (ring/chunk-local for swa/chunk) and
+    attends with the appropriate validity mask.  Returns (y, new_cache).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(cfg, p, x)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_seq = pos.ndim == 1
+    posv = pos[:, None] if per_seq else jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+
+    W = cache["k"].shape[1]
+    if mask_kind in ("swa", "chunk"):
+        assert not per_seq, "ring caches require a scalar position"
+        slot = pos % W
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    else:
+        # one-hot masked write: unlike dynamic-update-slice at a traced
+        # index, this stays elementwise under GSPMD when the cache's long
+        # sequence axis is sharded over ``model`` (no gather/reshard), and
+        # it supports per-sequence positions for free.
+        pb = pos[:, None] if per_seq else pos
+        sel = (jnp.arange(W)[None, :] == pb).astype(
+            cache["k"].dtype)[..., None, None]        # [B or 1, W, 1, 1]
+        k = cache["k"] * (1 - sel) + k_new * sel
+        v = cache["v"] * (1 - sel) + v_new * sel
+
+    idx = jnp.arange(W)
+    if mask_kind == "swa":
+        # slot i holds absolute position pos - ((slot - i) mod W); valid if >= 0
+        slot_pos = pos - jnp.mod(slot - idx, W)
+        ok = slot_pos >= 0
+    elif mask_kind == "chunk":
+        ok = idx <= slot                      # only the current chunk's prefix
+    else:
+        ok = idx[None, :] <= (pos[:, None] if per_seq else pos)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias.reshape(-1, 1, 1, W)          # [B or 1, 1, 1, W]
+    out = _sdpa(q, k, v, bias)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def init_attn_cache(cfg, batch, max_seq, mask_kind, width, dtype):
+    hd = cfg.resolved_head_dim
+    S = {"full": max_seq, "swa": min(width, max_seq),
+         "chunk": min(width, max_seq)}[mask_kind]
+    z = jnp.zeros((batch, S, cfg.n_kv_heads, hd), dtype)
+    return {"k": z, "v": z}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+def init_mla(cfg, key, dtype):
+    ks = jax.random.split(key, 6)
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, (cfg.n_heads, qd), dtype),
+        "w_dkv": dense_init(ks[1], cfg.d_model, cfg.kv_lora_rank, dtype),
+        "w_krope": dense_init(ks[2], cfg.d_model, cfg.qk_rope_head_dim, dtype),
+        "kv_norm": {"scale": jnp.ones((cfg.kv_lora_rank,), dtype)},
+        "w_uk": dense_init(ks[3], cfg.kv_lora_rank,
+                           (cfg.n_heads, cfg.qk_nope_head_dim), dtype),
+        "w_uv": dense_init(ks[4], cfg.kv_lora_rank,
+                           (cfg.n_heads, cfg.v_head_dim), dtype),
+        "wo": dense_init(ks[5], cfg.n_heads * cfg.v_head_dim, cfg.d_model,
+                         dtype).reshape(cfg.n_heads, cfg.v_head_dim,
+                                        cfg.d_model),
+    }
+
+
+def _mla_compress(cfg, p, x, positions):
+    from repro.models.modules import rmsnorm
+    c_kv = jnp.einsum("bsd,dl->bsl", x, p["w_dkv"])
+    c_kv = rmsnorm(p["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"])[:, :, None, :]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _mla_q(cfg, p, x, positions):
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions,
+                        cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_attend(cfg, p, q_nope, q_rope, k_nope, k_rope, v, qpos, kpos):
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    scores = (jnp.einsum("bshn,bthn->bhst", q_nope, k_nope) +
+              jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+              ).astype(jnp.float32)
+    bias = _causal_bias(len(qpos), len(kpos), qpos, kpos, "full", 0)
+    w = jax.nn.softmax(scores * scale + bias[:, 0], axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthv->bshv", w, v)
+
+
+def mla_fwd(cfg, p, x, positions):
+    """Full-sequence MLA (train/prefill), q-blocked beyond the dense
+    threshold (same flash-style schedule as ``_sdpa_any``).
+    Returns (y, cache)."""
+    c_kv, k_rope = _mla_compress(cfg, p, x, positions)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    k_nope = jnp.einsum("btl,lhn->bthn", c_kv, p["w_uk"])
+    v = jnp.einsum("btl,lhv->bthv", c_kv, p["w_uv"])
+    pos = positions[0] if positions.ndim > 1 else positions
+    S = x.shape[1]
+    if S <= BLOCKED_SDPA_THRESHOLD or S % SDPA_BLOCK_Q:
+        out = _mla_attend(cfg, p, q_nope, q_rope, k_nope, k_rope, v, pos, pos)
+    else:
+        bq = SDPA_BLOCK_Q
+
+        @jax.checkpoint
+        def body(_, qi):
+            qs = qi * bq
+            qb_n = jax.lax.dynamic_slice_in_dim(q_nope, qs, bq, axis=1)
+            qb_r = jax.lax.dynamic_slice_in_dim(q_rope, qs, bq, axis=1)
+            qpos = jax.lax.dynamic_slice_in_dim(pos, qs, bq)
+            return None, _mla_attend(cfg, p, qb_n, qb_r, k_nope, k_rope, v,
+                                     qpos, pos)
+
+        _, blocks = jax.lax.scan(body, None, jnp.arange(S // bq))
+        out = jnp.swapaxes(blocks, 0, 1).reshape(
+            x.shape[0], S, cfg.n_heads, cfg.v_head_dim)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(cfg, p, x, cache, pos):
+    """One-token MLA decode; naive or absorbed per cfg.mla_absorb.
+    ``pos`` may be a scalar or a per-sequence [B] vector."""
+    pos = jnp.asarray(pos, jnp.int32)
+    per_seq = pos.ndim == 1
+    posv = pos[:, None] if per_seq else jnp.full((1,), pos, jnp.int32)
+    c_new, kr_new = _mla_compress(cfg, p, x, posv)
+    S = cache["c_kv"].shape[1]
+    pb = pos[:, None] if per_seq else pos
+    sel = (jnp.arange(S)[None, :] == pb).astype(
+        cache["c_kv"].dtype)[..., None]
+    c_kv = cache["c_kv"] * (1 - sel) + c_new * sel
+    k_rope = cache["k_rope"] * (1 - sel) + kr_new * sel
+    q_nope, q_rope = _mla_q(cfg, p, x, posv)      # [B,1,H,*]
+    ok = jnp.arange(S)[None, :] <= (pos[:, None] if per_seq else pos)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias.reshape(-1, 1, 1, S)          # [B or 1, 1, 1, S]
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+
+    if cfg.mla_absorb:
+        # Absorb W_uk into the query and W_uv into the output: attention runs
+        # entirely in the compressed latent space (beyond-paper decode opt).
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"])
+        scores = (jnp.einsum("bshl,btl->bhst", q_lat, c_kv) +
+                  jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+                  ).astype(jnp.float32)
+        w = jax.nn.softmax(scores * scale + bias,
+                           axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhst,btl->bshl", w, c_kv)
+        out = jnp.einsum("bshl,lhv->bshv", ctx, p["w_uv"])
+    else:
+        k_nope = jnp.einsum("btl,lhn->bthn", c_kv, p["w_uk"])
+        v = jnp.einsum("btl,lhv->bthv", c_kv, p["w_uv"])
+        scores = (jnp.einsum("bshn,bthn->bhst", q_nope, k_nope) +
+                  jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+                  ).astype(jnp.float32)
+        w = jax.nn.softmax(scores * scale + bias,
+                           axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthv->bshv", w, v)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg, batch, max_seq, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }

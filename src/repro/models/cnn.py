@@ -1,0 +1,75 @@
+"""The paper's CNN (Section III-B / V-A): the model each vehicle trains on its
+private MNIST shard.  conv(32,3x3)-relu-pool / conv(64,3x3)-relu-pool /
+dense(128)-relu / dense(10), cross-entropy loss (Eq. 1), plain SGD (Eq. 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_cnn(key, num_classes=10, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+
+    def conv_init(k, shape):  # HWIO
+        fan_in = shape[0] * shape[1] * shape[2]
+        return (jax.random.normal(k, shape) / np.sqrt(fan_in)).astype(dtype)
+
+    return {
+        "conv1_w": conv_init(ks[0], (3, 3, 1, 32)),
+        "conv1_b": jnp.zeros((32,), dtype),
+        "conv2_w": conv_init(ks[1], (3, 3, 32, 64)),
+        "conv2_b": jnp.zeros((64,), dtype),
+        "fc1_w": (jax.random.normal(ks[2], (7 * 7 * 64, 128)) /
+                  np.sqrt(7 * 7 * 64)).astype(dtype),
+        "fc1_b": jnp.zeros((128,), dtype),
+        "fc2_w": (jax.random.normal(ks[3], (128, num_classes)) /
+                  np.sqrt(128)).astype(dtype),
+        "fc2_b": jnp.zeros((num_classes,), dtype),
+    }
+
+
+def cnn_forward(params, images):
+    """images: [B, 28, 28, 1] -> logits [B, num_classes]."""
+    dn = jax.lax.conv_dimension_numbers(images.shape,
+                                        params["conv1_w"].shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    x = jax.lax.conv_general_dilated(images, params["conv1_w"], (1, 1),
+                                     "SAME", dimension_numbers=dn)
+    x = jax.nn.relu(x + params["conv1_b"])
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    dn2 = jax.lax.conv_dimension_numbers(x.shape, params["conv2_w"].shape,
+                                         ("NHWC", "HWIO", "NHWC"))
+    x = jax.lax.conv_general_dilated(x, params["conv2_w"], (1, 1), "SAME",
+                                     dimension_numbers=dn2)
+    x = jax.nn.relu(x + params["conv2_b"])
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+    return x @ params["fc2_w"] + params["fc2_b"]
+
+
+def cross_entropy_loss(logits, labels):
+    """Eq. (1): -sum_a y_a log(yhat_a), mean-reduced over the batch."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(logits, labels):
+    """Eq. (12)."""
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+@jax.jit
+def sgd_train_step(params, images, labels, lr):
+    """One local iteration: Eqs. (1)-(2)."""
+    def loss_fn(p):
+        return cross_entropy_loss(cnn_forward(p, images), labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params = jax.tree_util.tree_map(lambda w, g: w - lr * g, params, grads)
+    return params, loss

@@ -1,0 +1,50 @@
+"""Modality frontend STUBS — the one sanctioned carve-out (see the brief):
+for [vlm]/[audio] architectures we implement the language/decoder transformer
+only; the ViT / EnCodec feature extractors are stand-ins that provide
+correctly-shaped embeddings (or token ids).
+
+``input_specs``-side helpers live in ``repro.launch.dryrun``; these utilities
+generate *concrete* stub embeddings for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class VisionFrontendStub:
+    """InternViT+projector stand-in: (B, n_tokens, d_model) patch embeddings."""
+
+    def __init__(self, cfg):
+        assert cfg.frontend == "vision"
+        self.n_tokens = cfg.n_frontend_tokens
+        self.d_model = cfg.d_model
+
+    def __call__(self, key, batch, dtype=jnp.float32):
+        return jax.random.normal(
+            key, (batch, self.n_tokens, self.d_model)).astype(dtype) * 0.02
+
+    def spec(self, batch, dtype):
+        return jax.ShapeDtypeStruct((batch, self.n_tokens, self.d_model),
+                                    dtype)
+
+
+class AudioFrontendStub:
+    """EnCodec stand-in: MusicGen consumes codec token ids directly, so the
+    stub emits integer codes in [0, vocab)."""
+
+    def __init__(self, cfg):
+        assert cfg.frontend == "audio"
+        self.vocab = cfg.vocab_size
+
+    def __call__(self, key, batch, seq_len):
+        return jax.random.randint(key, (batch, seq_len), 0, self.vocab,
+                                  jnp.int32)
+
+
+def frontend_for(cfg):
+    if cfg.frontend == "vision":
+        return VisionFrontendStub(cfg)
+    if cfg.frontend == "audio":
+        return AudioFrontendStub(cfg)
+    return None

@@ -1,0 +1,118 @@
+"""Mamba (S6 selective SSM) block for the Jamba hybrid architecture.
+
+Training/prefill runs the selective scan with ``jax.lax.scan`` over the
+sequence; decode is a single recurrence step.  State:
+  conv state [B, d_conv-1, d_inner]   (causal conv tail)
+  ssm  state [B, d_inner, d_state]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import chunked_scan, dense_init
+
+SCAN_CHUNK = 64  # sqrt-remat chunk for the selective scan (see chunked_scan)
+
+
+def _d_inner(cfg):
+    return cfg.mamba_expand * cfg.d_model
+
+
+def init_mamba(cfg, key, dtype):
+    d, di, ds = cfg.d_model, _d_inner(cfg), cfg.mamba_d_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, di)) /
+                   np.sqrt(cfg.mamba_d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * ds, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.full((di,), np.log(np.expm1(0.01)), dtype),
+        "A_log": jnp.log(A),                        # fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _ssm_params(cfg, p, xc):
+    """xc: [..., di] post-conv activations -> (dt, Bm, Cm) selective params."""
+    ds = cfg.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    dbc = jnp.einsum("...i,ir->...r", xc, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dbc[..., :dt_rank], p["dt_proj"])
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    Bm = dbc[..., dt_rank:dt_rank + ds].astype(jnp.float32)
+    Cm = dbc[..., dt_rank + ds:].astype(jnp.float32)
+    return dt, Bm, Cm
+
+
+def _step(cfg, p, h, xc_t, dt_t, B_t, C_t):
+    """One recurrence step. h:[B,di,ds]; xc_t:[B,di]; B_t,C_t:[B,ds]."""
+    A = -jnp.exp(p["A_log"])                               # [di, ds]
+    dA = jnp.exp(dt_t[..., None] * A[None])                # [B,di,ds]
+    dBx = (dt_t * xc_t.astype(jnp.float32))[..., None] * B_t[:, None, :]
+    h = dA * h + dBx
+    y = jnp.einsum("bis,bs->bi", h, C_t)
+    return h, y
+
+
+def mamba_fwd(cfg, p, x):
+    """x: [B,S,d] -> (y, cache) running the full selective scan."""
+    B, S, d = x.shape
+    di, dc = _d_inner(cfg), cfg.mamba_d_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv
+    pad = jnp.zeros((B, dc - 1, di), xin.dtype)
+    xp = jnp.concatenate([pad, xin], axis=1)
+    xc = sum(xp[:, i:i + S, :] * p["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu((xc + p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+
+    dt, Bm, Cm = _ssm_params(cfg, p, xc)
+
+    def body(h, inp):
+        xc_t, dt_t, B_t, C_t = inp
+        h, y = _step(cfg, p, h, xc_t, dt_t, B_t, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    xs = (jnp.swapaxes(xc, 0, 1), jnp.swapaxes(dt, 0, 1),
+          jnp.swapaxes(Bm, 0, 1), jnp.swapaxes(Cm, 0, 1))
+    h_last, ys = chunked_scan(body, h0, xs, SCAN_CHUNK)
+    y = jnp.swapaxes(ys, 0, 1)                             # [B,S,di]
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    cache = {"conv": xp[:, -(dc - 1):, :], "ssm": h_last}
+    return out, cache
+
+
+def mamba_decode(cfg, p, x, cache):
+    """x: [B,1,d]; cache: {'conv':[B,dc-1,di], 'ssm':[B,di,ds]}."""
+    B = x.shape[0]
+    di, dc = _d_inner(cfg), cfg.mamba_d_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    xin, z = jnp.split(xz, 2, axis=-1)                     # [B,di]
+    window = jnp.concatenate([cache["conv"], xin[:, None, :]], axis=1)
+    xc = jnp.einsum("bci,ci->bi", window, p["conv_w"])
+    xc = jax.nn.silu((xc + p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    dt, Bm, Cm = _ssm_params(cfg, p, xc)
+    h, y = _step(cfg, p, cache["ssm"], xc, dt, Bm, Cm)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    return out, {"conv": window[:, 1:, :], "ssm": h}
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    di = _d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+    }

@@ -1,0 +1,112 @@
+"""Minimal pure-pytree building blocks (no flax/haiku — params are dicts).
+
+All ``init_*`` return nested dicts of jnp arrays; all ``*_fwd`` are pure.
+Norm statistics are computed in float32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, in_dim, out_shape, dtype, scale=None):
+    """Variance-scaled init for a weight of shape (in_dim, *out_shape)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    shape = (in_dim, *out_shape)
+    if scale is None:
+        scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rmsnorm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab, dim, dtype):
+    return {"table": (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)}
+
+
+def embed_lookup(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, hd] (hd even); positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))           # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                   # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_scan(body, carry, xs, chunk: int):
+    """``lax.scan`` over the leading axis of ``xs`` with sqrt-style remat.
+
+    The sequence is split into chunks; the inner per-chunk scan is wrapped in
+    ``jax.checkpoint`` so AD saves only chunk-boundary carries instead of one
+    carry per step (O(S) -> O(S/chunk + chunk) live states).  Required for the
+    Mamba/RWKV recurrences at seq_len=4k+ (DESIGN.md §5).
+    """
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if length % chunk != 0 or length <= chunk:
+        return jax.lax.scan(body, carry, xs)
+    n = length // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(c, x_chunk):
+        return jax.lax.scan(body, c, x_chunk)
+
+    carry, ys_c = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape(length, *a.shape[2:]), ys_c)
+    return carry, ys
+
+
+def swiglu_mlp_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_mlp(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts with capacity-based sort dispatch (GShard/MaxText-style
+token dropping) — lowers to all-to-all/gather under pjit with experts sharded
+on the ``model`` mesh axis.
+
+Two paths:
+  * ``moe_fwd``      — train/prefill: per-batch-row sort dispatch into an
+                        [B, E, C, d] buffer, expert einsum, weighted combine.
+  * ``moe_decode``   — S==1: dense-mask combine (compute all experts, mask);
+                        cheap in absolute FLOPs at decode batch sizes and
+                        avoids gathering expert weights per token (DESIGN.md).
+
+Returns (y, aux_loss) where aux_loss is the switch-style load-balance loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import dense_init, swiglu_mlp, swiglu_mlp_init
+
+
+def init_moe(cfg, key, dtype):
+    E, d, f = cfg.n_routed_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),   # router kept fp32
+        "w_gate": dense_init(ks[1], d, (E, f), dtype).transpose(1, 0, 2),
+        "w_up": dense_init(ks[2], d, (E, f), dtype).transpose(1, 0, 2),
+        "w_down": dense_init(ks[3], f, (E, d), dtype).transpose(1, 0, 2),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_mlp_init(
+            ks[4], d, cfg.moe_d_ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _router(cfg, p, x):
+    """x:[..., d] -> (top-k normalized gates [..., k], expert idx [..., k],
+    aux load-balance loss)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    # switch-style aux loss: E * mean(fraction_routed * mean_prob)
+    E = cfg.n_routed_experts
+    onehot = jax.nn.one_hot(idx[..., 0], E)               # top-1 assignment
+    frac = jnp.mean(onehot.reshape(-1, E), axis=0)
+    mean_prob = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E * jnp.sum(frac * mean_prob) * cfg.router_aux_coef
+    return gates.astype(x.dtype), idx, aux
+
+
+def moe_fwd(cfg, p, x):
+    """x: [B, S, d].  Sort-based capacity dispatch per batch row."""
+    B, S, d = x.shape
+    E, k = cfg.n_routed_experts, cfg.moe_top_k
+    C = int(np.ceil(S * k * cfg.capacity_factor / E))
+    gates, idx, aux = _router(cfg, p, x)                  # [B,S,k]
+
+    flat_e = idx.reshape(B, S * k)                        # expert of assignment
+    flat_g = gates.reshape(B, S * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)     # [B, S*k]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_g = jnp.take_along_axis(flat_g, order, axis=-1)
+    sorted_tok = order // k                               # source token index
+    # position within expert = rank - start_offset(expert)
+    onehot = jax.nn.one_hot(sorted_e, E, dtype=jnp.int32)  # [B, S*k, E]
+    counts = jnp.cumsum(jnp.sum(onehot, axis=1), axis=-1)  # [B, E] inclusive
+    starts = counts - jnp.sum(onehot, axis=1)              # exclusive starts
+    pos_in_e = jnp.arange(S * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1)
+    keep = pos_in_e < C
+    slot = sorted_e * C + jnp.where(keep, pos_in_e, 0)
+
+    xs = jnp.take_along_axis(x, sorted_tok[..., None], axis=1)  # [B,S*k,d]
+    xs = xs * keep[..., None].astype(x.dtype)
+
+    def scatter_row(buf_slot, vals):
+        return jnp.zeros((E * C, d), x.dtype).at[buf_slot].add(vals)
+
+    buf = jax.vmap(scatter_row)(slot, xs).reshape(B, E, C, d)
+
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"]).reshape(B, E * C, d)
+
+    gathered = jnp.take_along_axis(out_buf, slot[..., None], axis=1)
+    gathered = gathered * (sorted_g * keep)[..., None]
+    y = jnp.zeros_like(x)
+
+    def combine_row(y0, tok, vals):
+        return y0.at[tok].add(vals)
+
+    y = jax.vmap(combine_row)(y, sorted_tok, gathered)
+    if cfg.n_shared_experts:
+        y = y + swiglu_mlp(p["shared"], x)
+    return y, aux
+
+
+def moe_decode(cfg, p, x):
+    """x: [B, 1, d] — dense-mask combine over all experts."""
+    B, S, d = x.shape
+    E = cfg.n_routed_experts
+    gates, idx, aux = _router(cfg, p, x)                  # [B,1,k]
+    mask = jnp.sum(jax.nn.one_hot(idx, E, dtype=x.dtype) *
+                   gates[..., None], axis=-2)             # [B,1,E]
+    g = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    per_e = jnp.einsum("bsef,efd->bsed", h, p["w_down"])
+    y = jnp.einsum("bsed,bse->bsd", per_e, mask)
+    if cfg.n_shared_experts:
+        y = y + swiglu_mlp(p["shared"], x)
+    return y, aux

@@ -1,0 +1,171 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + squared-ReLU
+channel-mix [arXiv:2404.05892].
+
+Recurrence (per head, head size N):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t ( S_{t-1} + diag(u) k_t v_t^T )
+with data-dependent decay w_t = exp(-exp(w0 + tanh(x_t A) B)) — the Finch
+hallmark.  Token-shift interpolation feeds r/k/v/w/g projections.
+
+State: wkv [B, H, N, N] (fp32), shift [B, d] (last token), per block; the
+channel-mix keeps its own shift state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import chunked_scan, dense_init
+
+SCAN_CHUNK = 64
+DECAY_LORA = 64
+
+
+def _heads(cfg):
+    assert cfg.d_model % cfg.rwkv_head_size == 0
+    return cfg.d_model // cfg.rwkv_head_size
+
+
+def init_time_mix(cfg, key, dtype):
+    d, H, N = cfg.d_model, _heads(cfg), cfg.rwkv_head_size
+    ks = jax.random.split(key, 9)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": dense_init(ks[1], d, DECAY_LORA, dtype, scale=0.01),
+        "wB": dense_init(ks[2], DECAY_LORA, d, dtype, scale=0.01),
+        "wr": dense_init(ks[3], d, d, dtype),
+        "wk": dense_init(ks[4], d, d, dtype),
+        "wv": dense_init(ks[5], d, d, dtype),
+        "wg": dense_init(ks[6], d, d, dtype),
+        "wo": dense_init(ks[7], d, d, dtype),
+        "u": (jax.random.normal(ks[8], (H, N)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((d,), dtype),   # per-head groupnorm on output
+    }
+
+
+def _tm_projections(cfg, p, x, x_prev):
+    """Token-shift mix then project. x, x_prev: [..., d]."""
+    mu = p["mu"].astype(jnp.float32)
+    xf, xpf = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+    mix = lambda i: (xf + mu[i] * (xpf - xf)).astype(x.dtype)
+    r = jnp.einsum("...d,de->...e", mix(0), p["wr"])
+    k = jnp.einsum("...d,de->...e", mix(1), p["wk"])
+    v = jnp.einsum("...d,de->...e", mix(2), p["wv"])
+    wx = mix(3)
+    g = jnp.einsum("...d,de->...e", mix(4), p["wg"])
+    dec = jnp.einsum("...d,dl->...l", wx, p["wA"])
+    dec = jnp.einsum("...l,ld->...d", jnp.tanh(dec.astype(jnp.float32)
+                                               ).astype(x.dtype), p["wB"])
+    logw = p["w0"] + dec.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                     # in (0,1), data-dependent
+    return r, k, v, w, g
+
+
+def _wkv_step(p, S, r_t, k_t, v_t, w_t):
+    """S:[B,H,N,N]; r/k/v/w: [B,H,N] (fp32 recurrence)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r_t, k_t, v_t, w_t))
+    kv = kf[..., :, None] * vf[..., None, :]        # [B,H,N,N]
+    y = jnp.einsum("bhn,bhnm->bhm", rf, S + p["u"][..., None] * kv)
+    S = wf[..., None] * S + kv
+    return S, y
+
+
+def time_mix_fwd(cfg, p, x, x_prev_last=None):
+    """x: [B,S,d] -> (y, cache {'wkv','shift'})."""
+    B, S, d = x.shape
+    H, N = _heads(cfg), cfg.rwkv_head_size
+    prev = jnp.concatenate(
+        [jnp.zeros((B, 1, d), x.dtype) if x_prev_last is None
+         else x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, w, g = _tm_projections(cfg, p, x, prev)
+    rh, kh, vh = (a.reshape(B, S, H, N) for a in (r, k, v))
+    wh = w.reshape(B, S, H, N)
+
+    def body(Sst, inp):
+        r_t, k_t, v_t, w_t = inp
+        Sst, y = _wkv_step(p, Sst, r_t, k_t, v_t, w_t)
+        return Sst, y
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (rh, kh, vh, wh))
+    S_last, ys = chunked_scan(body, S0, xs, SCAN_CHUNK)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, d)     # fp32
+    y = _out_norm(cfg, p, y, g)
+    return y, {"wkv": S_last, "shift": x[:, -1, :]}
+
+
+def time_mix_decode(cfg, p, x, cache):
+    """x: [B,1,d]."""
+    B, _, d = x.shape
+    H, N = _heads(cfg), cfg.rwkv_head_size
+    r, k, v, w, g = _tm_projections(cfg, p, x[:, 0], cache["shift"])
+    Sst, y = _wkv_step(p, cache["wkv"], r.reshape(B, H, N),
+                       k.reshape(B, H, N), v.reshape(B, H, N),
+                       w.reshape(B, H, N))
+    y = _out_norm(cfg, p, y.reshape(B, 1, d), g[:, None, :])
+    return y, {"wkv": Sst, "shift": x[:, 0, :]}
+
+
+def _out_norm(cfg, p, y, g):
+    """Per-head groupnorm then silu gate then output proj."""
+    B = y.shape[0]
+    H, N = _heads(cfg), cfg.rwkv_head_size
+    yh = y.reshape(*y.shape[:-1], H, N)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(y.shape) * p["ln_scale"].astype(jnp.float32)
+    y = y.astype(g.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype)
+    return jnp.einsum("...d,de->...e", y, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+def init_channel_mix(cfg, key, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, cfg.d_model)) * 0.5
+               + 0.25).astype(dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        "wv": dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype),
+        "wr": dense_init(ks[0], cfg.d_model, cfg.d_model, dtype),
+    }
+
+
+def channel_mix_fwd(cfg, p, x, x_prev_last=None):
+    B, S, d = x.shape
+    prev = jnp.concatenate(
+        [jnp.zeros((B, 1, d), x.dtype) if x_prev_last is None
+         else x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    y, _ = _cm(cfg, p, x, prev)
+    return y, {"shift": x[:, -1, :]}
+
+
+def channel_mix_decode(cfg, p, x, cache):
+    y, _ = _cm(cfg, p, x, cache["shift"][:, None, :])
+    return y, {"shift": x[:, 0, :]}
+
+
+def _cm(cfg, p, x, prev):
+    mu = p["mu"].astype(jnp.float32)
+    xf, pf = x.astype(jnp.float32), prev.astype(jnp.float32)
+    xk = (xf + mu[0] * (pf - xf)).astype(x.dtype)
+    xr = (xf + mu[1] * (pf - xf)).astype(x.dtype)
+    k = jnp.einsum("...d,df->...f", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    v = jnp.einsum("...f,fd->...d", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, p["wr"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    return r * v, None
+
+
+def init_rwkv_cache(cfg, batch, dtype):
+    H, N = _heads(cfg), cfg.rwkv_head_size
+    return {
+        "wkv": jnp.zeros((batch, H, N, N), jnp.float32),
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+    }

@@ -1,0 +1,395 @@
+"""Decoder-LM assembly for every assigned architecture.
+
+One generic stack interprets an ``ArchConfig``:
+  * scan-over-periods (``lax.scan`` + ``jax.checkpoint``) keeps HLO size and
+    activation memory depth-independent (mandatory for llama3-405b);
+  * heterogeneous layer patterns (jamba 1:7, llama4 chunked/global, deepseek
+    first-k-dense) are expressed as one "period" of sublayers that repeats;
+  * three entry points: ``forward`` (train), ``prefill`` (build cache),
+    ``decode_step`` (one token against a cache).
+
+Params / caches are plain nested dicts -> trivially shardable by path rules
+(``repro.sharding.specs``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchConfig, MIXER_ATTN, MIXER_ATTN_GLOBAL,
+                                MIXER_MAMBA, MIXER_MLA, MIXER_RWKV, MLP_DENSE,
+                                MLP_MOE, MLP_RWKV, SubLayer)
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.modules import (dense_init, embed_init, embed_lookup,
+                                  layernorm, layernorm_init, rmsnorm,
+                                  rmsnorm_init, swiglu_mlp, swiglu_mlp_init)
+
+
+def _norm_init(cfg, dtype):
+    return layernorm_init(cfg.d_model, dtype) if cfg.family == "ssm" \
+        else rmsnorm_init(cfg.d_model, dtype)
+
+
+def _norm(cfg, p, x):
+    return layernorm(p, x, cfg.norm_eps) if cfg.family == "ssm" \
+        else rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_sublayer(cfg: ArchConfig, key, sub: SubLayer, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": _norm_init(cfg, dtype), "ln2": _norm_init(cfg, dtype)}
+    if sub.mixer in (MIXER_ATTN, MIXER_ATTN_GLOBAL):
+        p["mixer"] = attn.init_attention(cfg, k1, dtype)
+    elif sub.mixer == MIXER_MLA:
+        p["mixer"] = attn.init_mla(cfg, k1, dtype)
+    elif sub.mixer == MIXER_MAMBA:
+        p["mixer"] = mamba_mod.init_mamba(cfg, k1, dtype)
+    elif sub.mixer == MIXER_RWKV:
+        p["mixer"] = rwkv_mod.init_time_mix(cfg, k1, dtype)
+    else:
+        raise ValueError(sub.mixer)
+    if sub.mlp == MLP_DENSE:
+        p["mlp"] = swiglu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif sub.mlp == MLP_MOE:
+        p["mlp"] = moe_mod.init_moe(cfg, k2, dtype)
+    elif sub.mlp == MLP_RWKV:
+        p["mlp"] = rwkv_mod.init_channel_mix(cfg, k2, dtype)
+    else:
+        raise ValueError(sub.mlp)
+    return p
+
+
+def _init_period(cfg: ArchConfig, key, dtype):
+    subs = cfg.sublayers()
+    keys = jax.random.split(key, len(subs))
+    return {f"sub{j}": _init_sublayer(cfg, keys[j], sub, dtype)
+            for j, sub in enumerate(subs)}
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 4 + cfg.first_k_dense)
+    params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": _norm_init(cfg, dtype),
+        "stack": jax.vmap(
+            lambda k: _init_period(cfg, k, dtype))(
+                jax.random.split(ks[1], cfg.n_periods)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)}
+    if cfg.first_k_dense:
+        params["prefix"] = [
+            _init_sublayer(cfg, ks[4 + i], cfg.prefix_sublayer(), dtype)
+            for i in range(cfg.first_k_dense)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sublayer application
+# ---------------------------------------------------------------------------
+def _apply_sublayer(cfg, p, sub: SubLayer, h, positions):
+    """Train/prefill path. Returns (h, aux_loss, cache)."""
+    x = _norm(cfg, p["ln1"], h)
+    cache = {}
+    if sub.mixer in (MIXER_ATTN, MIXER_ATTN_GLOBAL):
+        kind, width = attn.mask_spec_for(cfg, sub.mixer)
+        y, c = attn.attention_fwd(cfg, p["mixer"], x, positions, kind, width)
+    elif sub.mixer == MIXER_MLA:
+        y, c = attn.mla_fwd(cfg, p["mixer"], x, positions)
+    elif sub.mixer == MIXER_MAMBA:
+        y, c = mamba_mod.mamba_fwd(cfg, p["mixer"], x)
+    else:
+        y, c = rwkv_mod.time_mix_fwd(cfg, p["mixer"], x)
+    cache["mixer"] = c
+    h = h + y
+    x = _norm(cfg, p["ln2"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if sub.mlp == MLP_DENSE:
+        y = swiglu_mlp(p["mlp"], x)
+    elif sub.mlp == MLP_MOE:
+        y, aux = moe_mod.moe_fwd(cfg, p["mlp"], x)
+    else:
+        y, cm = rwkv_mod.channel_mix_fwd(cfg, p["mlp"], x)
+        cache["mlp"] = cm
+    h = h + y
+    return h, aux, cache
+
+
+def _apply_sublayer_decode(cfg, p, sub: SubLayer, h, cache, pos):
+    """One-token path. Returns (h, new_cache)."""
+    x = _norm(cfg, p["ln1"], h)
+    new_cache = {}
+    if sub.mixer in (MIXER_ATTN, MIXER_ATTN_GLOBAL):
+        kind, width = attn.mask_spec_for(cfg, sub.mixer)
+        y, c = attn.attention_decode(cfg, p["mixer"], x, cache["mixer"], pos,
+                                     kind, width)
+    elif sub.mixer == MIXER_MLA:
+        y, c = attn.mla_decode(cfg, p["mixer"], x, cache["mixer"], pos)
+    elif sub.mixer == MIXER_MAMBA:
+        y, c = mamba_mod.mamba_decode(cfg, p["mixer"], x, cache["mixer"])
+    else:
+        y, c = rwkv_mod.time_mix_decode(cfg, p["mixer"], x, cache["mixer"])
+    new_cache["mixer"] = c
+    h = h + y
+    x = _norm(cfg, p["ln2"], h)
+    if sub.mlp == MLP_DENSE:
+        y = swiglu_mlp(p["mlp"], x)
+    elif sub.mlp == MLP_MOE:
+        y, _ = moe_mod.moe_decode(cfg, p["mlp"], x)
+    else:
+        y, cm = rwkv_mod.channel_mix_decode(cfg, p["mlp"], x, cache["mlp"])
+        new_cache["mlp"] = cm
+    h = h + y
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+def _embed_inputs(cfg, params, tokens, frontend_embeds):
+    h = embed_lookup(params["embed"], tokens)
+    if cfg.frontend == "vision" and cfg.n_frontend_tokens:
+        assert frontend_embeds is not None, \
+            f"{cfg.name} requires frontend_embeds (B,{cfg.n_frontend_tokens},d)"
+        h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+def _lm_head(cfg, params, h):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"]["table"])
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"]["w"])
+
+
+# ---------------------------------------------------------------------------
+# forward (train)
+# ---------------------------------------------------------------------------
+def _maybe_shard_h(cfg, h):
+    """Optional activation-sharding constraint between layers: batch on
+    ``data`` AND d_model on ``model`` (sequence-parallel analog).
+
+    Anchoring the batch axis matters: without it GSPMD may pick
+    contraction-sharded matmuls (batch replicated, d contracted over the
+    data axis) whose partial sums emit an [B,S,d]-sized all-reduce per
+    matmul per layer — measured 38.8 TB/device/step on llama3-405b
+    (EXPERIMENTS.md §Perf iteration 4)."""
+    if not cfg.shard_activations:
+        return h
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(h, P("data", None, "model"))
+
+
+def forward(cfg: ArchConfig, params, tokens, frontend_embeds=None):
+    """Returns (logits [B,S,V], aux_loss scalar)."""
+    h = _embed_inputs(cfg, params, tokens, frontend_embeds)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    subs = cfg.sublayers()
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for p in params.get("prefix", []):
+        h, aux, _ = _apply_sublayer(cfg, p, cfg.prefix_sublayer(), h,
+                                    positions)
+        aux_total = aux_total + aux
+    h = _maybe_shard_h(cfg, h)
+
+    period_fn = _make_period_fn(cfg, subs, positions)
+    (h, aux_total), _ = jax.lax.scan(period_fn, (h, aux_total),
+                                     params["stack"])
+    h = _norm(cfg, params["final_norm"], h)
+    return _lm_head(cfg, params, h), aux_total
+
+
+def _make_period_fn(cfg, subs, positions):
+    apply = _apply_sublayer
+    if cfg.remat_sublayer:
+        apply = jax.checkpoint(_apply_sublayer, static_argnums=(0, 2))
+
+    def period_fn(carry, pparams):
+        h, aux_acc = carry
+        for j, sub in enumerate(subs):
+            h, aux, _ = apply(cfg, pparams[f"sub{j}"], sub, h, positions)
+            aux_acc = aux_acc + aux
+        return (_maybe_shard_h(cfg, h), aux_acc), None
+
+    if cfg.no_remat:
+        return period_fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            period_fn, policy=jax.checkpoint_policies.dots_saveable)
+    if cfg.remat_policy == "dots_nb":
+        # save weight-activation matmuls; recompute attention scores
+        # (batch-dim dots) and elementwise — the sweet spot measured in
+        # EXPERIMENTS.md §Perf
+        return jax.checkpoint(
+            period_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(period_fn)
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens, frontend_embeds=None):
+    """Like ``forward`` but returns the final-norm hidden states instead of
+    logits — the vocab-chunked loss path applies the LM head itself."""
+    h = _embed_inputs(cfg, params, tokens, frontend_embeds)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    subs = cfg.sublayers()
+    aux_total = jnp.zeros((), jnp.float32)
+    for p in params.get("prefix", []):
+        h, aux, _ = _apply_sublayer(cfg, p, cfg.prefix_sublayer(), h,
+                                    positions)
+        aux_total = aux_total + aux
+    h = _maybe_shard_h(cfg, h)
+    period_fn = _make_period_fn(cfg, subs, positions)
+    (h, aux_total), _ = jax.lax.scan(period_fn, (h, aux_total),
+                                     params["stack"])
+    return _norm(cfg, params["final_norm"], h), aux_total
+
+
+def head_weight(cfg: ArchConfig, params):
+    """[d, V] LM-head weight (transposed embedding when tied)."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+def prefill(cfg: ArchConfig, params, tokens, frontend_embeds=None):
+    """Forward pass that also returns the per-layer cache pytree."""
+    h = _embed_inputs(cfg, params, tokens, frontend_embeds)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    subs = cfg.sublayers()
+    caches = {"prefix": []}
+
+    for p in params.get("prefix", []):
+        h, _, c = _apply_sublayer(cfg, p, cfg.prefix_sublayer(), h, positions)
+        caches["prefix"].append(c)
+
+    def period_fn(h, pparams):
+        layer_caches = {}
+        for j, sub in enumerate(subs):
+            h, _, c = _apply_sublayer(cfg, pparams[f"sub{j}"], sub, h,
+                                      positions)
+            layer_caches[f"sub{j}"] = c
+        return h, layer_caches
+
+    h, stack_caches = jax.lax.scan(period_fn, h, params["stack"])
+    caches["stack"] = stack_caches
+    if not caches["prefix"]:
+        del caches["prefix"]
+    h = _norm(cfg, params["final_norm"], h)
+    return _lm_head(cfg, params, h), caches
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos):
+    """token: [B,1] int32; pos: scalar int32 absolute position.
+
+    Returns (logits [B,1,V], new_cache)."""
+    h = embed_lookup(params["embed"], token)
+    subs = cfg.sublayers()
+
+    new_prefix = []
+    for p, c in zip(params.get("prefix", []), cache.get("prefix", [])):
+        h, nc = _apply_sublayer_decode(cfg, p, cfg.prefix_sublayer(), h, c,
+                                       pos)
+        new_prefix.append(nc)
+
+    def period_fn(h, inp):
+        pparams, pcache = inp
+        new_caches = {}
+        for j, sub in enumerate(subs):
+            h, nc = _apply_sublayer_decode(cfg, pparams[f"sub{j}"], sub, h,
+                                           pcache[f"sub{j}"], pos)
+            new_caches[f"sub{j}"] = nc
+        return h, new_caches
+
+    h, new_stack = jax.lax.scan(period_fn, h, (params["stack"],
+                                               cache["stack"]))
+    h = _norm(cfg, params["final_norm"], h)
+    logits = _lm_head(cfg, params, h)
+    new_cache = {"stack": new_stack}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+def _sublayer_cache(cfg, sub: SubLayer, batch, max_seq, dtype):
+    c = {}
+    if sub.mixer in (MIXER_ATTN, MIXER_ATTN_GLOBAL):
+        kind, width = attn.mask_spec_for(cfg, sub.mixer)
+        c["mixer"] = attn.init_attn_cache(cfg, batch, max_seq, kind, width,
+                                          dtype)
+    elif sub.mixer == MIXER_MLA:
+        c["mixer"] = attn.init_mla_cache(cfg, batch, max_seq, dtype)
+    elif sub.mixer == MIXER_MAMBA:
+        c["mixer"] = mamba_mod.init_mamba_cache(cfg, batch, dtype)
+    else:
+        r = rwkv_mod.init_rwkv_cache(cfg, batch, dtype)
+        c["mixer"] = {"wkv": r["wkv"], "shift": r["shift_tm"]}
+    if sub.mlp == MLP_RWKV:
+        c["mlp"] = {"shift": jnp.zeros((batch, cfg.d_model), dtype)}
+    return c
+
+
+def init_cache(cfg: ArchConfig, batch, max_seq, dtype=jnp.float32):
+    subs = cfg.sublayers()
+    period = {f"sub{j}": _sublayer_cache(cfg, sub, batch, max_seq, dtype)
+              for j, sub in enumerate(subs)}
+    stack = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.n_periods, *a.shape), a.dtype), period)
+    cache = {"stack": stack}
+    if cfg.first_k_dense:
+        cache["prefix"] = [
+            _sublayer_cache(cfg, cfg.prefix_sublayer(), batch, max_seq, dtype)
+            for _ in range(cfg.first_k_dense)]
+    return cache
+
+
+def grow_cache(cfg: ArchConfig, cache, batch, max_seq, dtype=jnp.float32):
+    """Pad a prefill-produced cache out to ``max_seq`` decode capacity.
+
+    Full-attention / MLA caches grow along the sequence axis (zero-padded at
+    the tail — future slots); ring (swa) / chunk / SSM caches are already in
+    decode layout and pass through unchanged."""
+    target = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))
+
+    def pad(t, c):
+        if tuple(t.shape) == tuple(c.shape):
+            return c
+        padding = [(0, ts - cs) for ts, cs in zip(t.shape, c.shape)]
+        return jnp.pad(c, padding)
+
+    return jax.tree_util.tree_map(pad, target, cache)
+
+
+def param_count(cfg: ArchConfig, active_only=False) -> int:
+    """Analytic parameter count; active_only counts top-k routed experts."""
+    import math
+    shapes = jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    total = sum(math.prod(l.shape) for l in
+                jax.tree_util.tree_leaves(shapes))
+    if active_only and cfg.n_routed_experts:
+        # subtract inactive routed-expert weights
+        E, k = cfg.n_routed_experts, cfg.moe_top_k
+        n_moe_layers = sum(1 for s in cfg.sublayers() if s.mlp == MLP_MOE) \
+            * cfg.n_periods
+        expert_params = 3 * cfg.d_model * cfg.moe_d_ff
+        total -= n_moe_layers * (E - k) * expert_params
+    return total

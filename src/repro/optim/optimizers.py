@@ -1,0 +1,102 @@
+"""Optimizers as pure pytree transforms (optax-style, zero deps).
+
+The paper's local update is plain SGD (Eq. 2) — ``sgd`` is the faithful one;
+momentum / Adam are provided for the transformer training driver.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params)
+
+
+def sgd(lr) -> Optimizer:
+    """Eq. (2): w <- w - eta * grad.  ``lr`` may be a float or schedule fn."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        eta = lr_fn(state["step"])
+        upd = jax.tree_util.tree_map(lambda g: -eta * g, grads)
+        return upd, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum_sgd(lr, mu: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(
+                    lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        eta = lr_fn(state["step"])
+        m = jax.tree_util.tree_map(
+            lambda mm, g: mu * mm + g.astype(jnp.float32), state["m"], grads)
+        upd = jax.tree_util.tree_map(lambda mm: -eta * mm, m)
+        return upd, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = lr_fn(step)
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) *
+            jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def leaf(mm, vv, p):
+            upd = -(eta * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps))
+            if weight_decay:
+                upd = upd - eta * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        upd = jax.tree_util.tree_map(leaf, m, v, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params,
+        updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm

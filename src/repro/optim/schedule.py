@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure fns of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return floor + (lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         floor: float = 0.0):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), floor)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return fn

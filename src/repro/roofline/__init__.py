@@ -1,0 +1,5 @@
+from repro.roofline.hlo_parse import parse_hlo_module, HloStats
+from repro.roofline.analysis import RooflineTerms, roofline_terms, V5E
+
+__all__ = ["parse_hlo_module", "HloStats", "RooflineTerms", "roofline_terms",
+           "V5E"]

@@ -1,0 +1,219 @@
+"""Trip-count-aware HLO text analysis.
+
+XLA's ``cost_analysis`` counts ``while``-loop bodies ONCE, so scanned-layer
+models under-report FLOPs/collective-bytes by the layer count (verified
+empirically — see EXPERIMENTS.md §Dry-run methodology).  This parser walks
+the compiled HLO text, recovers each scan loop's static trip count from its
+condition computation, and propagates multipliers through the call graph
+(while bodies, fusions, to_apply reducers), yielding:
+
+  * matmul FLOPs  — 2 * prod(result_dims) * prod(lhs_contracting_dims),
+                    exact for ``dot`` (the FLOP-dominant op class);
+  * collective bytes by op kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), with ring-traffic conventions.
+
+All numbers are PER DEVICE (the SPMD module is the per-partition program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+"
+                    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*)?\{\s*$")
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else (dt, [])
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # the remainder of the line after the opcode paren
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # op name -> type str
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)  # kind -> bytes
+    while_trips: dict = field(default_factory=dict)       # body name -> trips
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _split_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            # computation headers sit at column 0 and end with '{'
+            # (op lines are indented, so the anchored regex skips them)
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            cur.ops.append(Op(name, type_str, opcode, rest))
+            cur.shapes[name] = type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _entry_name(text: str, comps) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fall back: a computation not called by any other
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            called.update(_CALL_RE.findall(op.rest))
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def _trip_count(cond_name: str, comps, seen=None) -> int:
+    """Max integer constant reachable from the while condition — scan loops
+    compare the induction var LT a literal trip count."""
+    seen = seen or set()
+    if cond_name in seen or cond_name not in comps:
+        return 1
+    seen.add(cond_name)
+    best = 1
+    comp = comps[cond_name]
+    for op in comp.ops:
+        if op.opcode == "constant":
+            m = re.match(r"\s*(\d+)\s*\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        for c in _CONST_RE.findall(op.rest):
+            best = max(best, int(c))
+        for callee in _CALL_RE.findall(op.rest):
+            if callee != cond_name:
+                best = max(best, _trip_count(callee, comps, seen))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, out_dims = _shape_dims(op.type_str)
+    if out_dims is None:
+        return 0.0
+    m = re.match(r"\s*%([\w\.\-]+)", op.rest)
+    lhs_dims = []
+    if m and m.group(1) in comp.shapes:
+        _, lhs_dims = _shape_dims(comp.shapes[m.group(1)])
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if mc and lhs_dims:
+        for d in mc.group(1).split(","):
+            if d:
+                contract *= lhs_dims[int(d)]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * contract
+
+
+def _collective_bytes(op: Op, comp: Computation) -> float:
+    """Ring-traffic convention per op kind (bytes crossing links/device)."""
+    res = shape_bytes(op.type_str)
+    if op.opcode == "all-reduce":
+        return 2.0 * res                     # reduce-scatter + all-gather ring
+    if op.opcode == "reduce-scatter":
+        # traffic ~ input size; look up the first operand's shape
+        m = re.match(r"\s*%([\w\.\-]+)", op.rest)
+        if m and m.group(1) in comp.shapes:
+            return float(shape_bytes(comp.shapes[m.group(1)]))
+        return float(res)
+    return float(res)                        # all-gather / a2a / permute
+
+
+def parse_hlo_module(text: str) -> HloStats:
+    comps = _split_computations(text)
+    entry = _entry_name(text, comps)
+    stats = HloStats(collective_bytes={k: 0.0 for k in _COLLECTIVES})
+
+    # propagate multipliers through the call graph
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float, stack=()):
+        if name not in comps or name in stack:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        comp = comps[name]
+        for op in comp.ops:
+            if op.opcode == "while":
+                wm = _WHILE_RE.search(op.rest)
+                if wm:
+                    cond, body = wm.groups()
+                    trips = _trip_count(cond, comps)
+                    stats.while_trips[body] = trips
+                    visit(body, m * trips, stack + (name,))
+                    visit(cond, m * trips, stack + (name,))
+                continue
+            for callee in _CALL_RE.findall(op.rest):
+                visit(callee, m, stack + (name,))
+
+    visit(entry, 1.0)
+
+    for name, m in mult.items():
+        comp = comps[name]
+        for op in comp.ops:
+            if op.opcode == "dot":
+                stats.dot_flops += m * _dot_flops(op, comp)
+            elif op.opcode in _COLLECTIVES:
+                stats.collective_bytes[op.opcode] += \
+                    m * _collective_bytes(op, comp)
+    return stats

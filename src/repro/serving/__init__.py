@@ -1,0 +1,3 @@
+from repro.serving.batcher import BatchedServer, Request
+
+__all__ = ["BatchedServer", "Request"]

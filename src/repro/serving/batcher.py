@@ -1,0 +1,131 @@
+"""Slot-based continuous-batching server for the decode path.
+
+The decode shapes (decode_32k / long_500k) measure ONE step of exactly this
+runtime: a fixed pool of B cache slots, each slot independently somewhere in
+its sequence, one fused ``serve_step`` advancing every active slot per tick.
+New requests claim free slots (their prompt is prefilled into the slot's
+cache region); finished slots free immediately — no batch barrier.
+
+Per-slot positions require position-aware decode, so the server drives
+``decode_step`` with a per-slot ``pos`` vector via ``jax.vmap`` over the
+batch dim of the cache pytree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [P] int32
+    max_new: int
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Continuous batching over a fixed slot pool."""
+
+    def __init__(self, cfg: ArchConfig, params, n_slots: int = 4,
+                 max_seq: int = 128, eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.cache = T.init_cache(cfg, n_slots, max_seq)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int64)
+        self.queue: list[Request] = []
+        self._rid = 0
+
+        def step_all(params, tokens, cache, pos_vec):
+            """One fused decode step for ALL slots: ``decode_step`` accepts
+            a per-sequence position vector (continuous batching)."""
+            logits, new_cache = T.decode_step(cfg, params, tokens, cache,
+                                              pos_vec)
+            return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+
+        self._step = jax.jit(step_all)
+        self._prefill = jax.jit(
+            lambda p, t: T.prefill(cfg, p, t))
+        self._last_tokens = np.zeros((n_slots, 1), np.int32)
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
+        req = Request(self._rid, np.asarray(prompt, np.int32), max_new)
+        self._rid += 1
+        self.queue.append(req)
+        return req
+
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -- engine ---------------------------------------------------------------
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, cache = self._prefill(self.params,
+                                          jnp.asarray(req.prompt[None]))
+            cache = T.grow_cache(self.cfg, cache, 1, self.max_seq)
+
+            # write the slot's cache row; stack leaves carry the period axis
+            # first (batch at axis 1), everything else has batch leading
+            def write(path, full, one):
+                names = [str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path]
+                if "stack" in names:
+                    return full.at[:, slot].set(one[:, 0])
+                return full.at[slot].set(one[0])
+
+            self.cache = jax.tree_util.tree_map_with_path(
+                write, self.cache, cache)
+            first = int(jnp.argmax(logits[0, -1]))
+            req.out.append(first)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+            self._last_tokens[slot, 0] = first
+
+    def tick(self):
+        """One decode step for every active slot."""
+        self._admit()
+        if self.active() == 0:
+            return
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        tokens = jnp.asarray(self._last_tokens)          # [n_slots, 1]
+        next_tokens, self.cache = self._step(self.params, tokens,
+                                             self.cache, pos)
+        next_np = np.asarray(next_tokens)[:, 0]
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(next_np[slot])
+            req.out.append(tok)
+            self.slot_pos[slot] += 1
+            self._last_tokens[slot, 0] = tok
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if len(req.out) >= req.max_new or hit_eos or \
+                    self.slot_pos[slot] >= self.max_seq - 1:
+                req.done = True
+                self.slot_req[slot] = None       # slot freed immediately
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or self.active()) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return ticks

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (batch_spec, cache_specs, needs_fsdp,
+                                  param_specs, spec_tree_to_shardings)
+
+__all__ = ["batch_spec", "cache_specs", "needs_fsdp", "param_specs",
+           "spec_tree_to_shardings"]

@@ -1,0 +1,221 @@
+"""Per-arch PartitionSpec rules.
+
+Strategy (DESIGN.md §5):
+  * TP   — contraction/head/expert dims sharded on the ``model`` axis;
+  * FSDP — additionally shard the d_model-ish dim over (``pod``,) ``data``
+           when the unsharded per-device parameter bytes would blow HBM
+           (``needs_fsdp``); GSPMD then emits all-gather on use +
+           reduce-scatter on grads (ZeRO-3 semantics);
+  * every rule checks divisibility against the actual mesh axis sizes and
+    silently degrades to replication for that dim — so the same rules drive
+    every arch on every mesh.
+
+Rules are keyed on the *leaf path* of the params pytree (plain dicts), so
+model code stays sharding-free.  Leaves under ``stack`` carry a leading
+period axis which is never sharded.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+# param-bytes-per-device (bf16, model-axis TP only) above which FSDP turns on
+_FSDP_THRESHOLD_BYTES = 2 << 30
+
+
+def needs_fsdp(cfg: ArchConfig, model_par: int = 16) -> bool:
+    return T.param_count(cfg) * 2 / model_par > _FSDP_THRESHOLD_BYTES
+
+
+def _axes(mesh: Mesh):
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    return data_axes, ("model" if "model" in names else None)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _ok(dim: int, mesh: Mesh, axes) -> bool:
+    return axes is not None and dim % _size(mesh, axes) == 0
+
+
+def _leaf_spec(cfg, mesh, fsdp_axes, path_names, shape) -> P:
+    """The rule table.  ``shape`` excludes any leading period axis."""
+    name = path_names[-1]
+    parent = path_names[-2] if len(path_names) > 1 else ""
+    model = "model"
+    dp = fsdp_axes if fsdp_axes else None
+
+    def pick(*dims):
+        """dims: one proposed axis-assignment per tensor dim; degrade each
+        to None unless divisible."""
+        return P(*[a if _ok(shape[i], mesh, a) else None
+                   for i, a in enumerate(dims)])
+
+    # ---- embeddings / head ------------------------------------------------
+    if name == "table":
+        return pick(model, dp)
+    if parent == "lm_head":
+        return pick(dp, model)
+    # ---- norms / scalars --------------------------------------------------
+    if name in ("scale", "bias", "mu", "w0", "u", "ln_scale", "dt_bias",
+                "D", "conv_b"):
+        return P(*([None] * len(shape)))
+    # ---- MoE ---------------------------------------------------------------
+    if name == "router":
+        return pick(dp, None)
+    if parent != "mixer" and name in ("w_gate", "w_up") and len(shape) == 3:
+        return pick(model, dp, None)            # [E, d, f] expert-parallel
+    if name == "w_down" and len(shape) == 3:
+        return pick(model, None, dp)            # [E, f, d]
+    # ---- dense MLP -----------------------------------------------------------
+    if name in ("w_gate", "w_up"):
+        return pick(dp, model)                  # [d, f]
+    if name == "w_down":
+        return pick(model, dp)                  # [f, d]
+    # ---- attention -------------------------------------------------------------
+    if name == "wq" and len(shape) == 3:
+        return pick(dp, model, None)            # [d, H, hd]
+    if name in ("wk", "wv") and len(shape) == 3:
+        return pick(dp, model, None)            # [d, Kv, hd]
+    if name == "wo" and len(shape) == 3:
+        return pick(model, None, dp)            # [H, hd, d]
+    if name in ("bq", "bk", "bv"):
+        return pick(model, None)
+    # ---- MLA ----------------------------------------------------------------
+    if name == "w_dkv":
+        return pick(dp, model)                  # [d, lora]
+    if name == "w_krope":
+        return pick(dp, None)
+    if name in ("w_uk", "w_uv"):
+        return pick(None, model, None)          # [lora, H, *]
+    # ---- mamba ------------------------------------------------------------------
+    if name == "in_proj":
+        return pick(dp, model)                  # [d, 2di]
+    if name == "conv_w":
+        return pick(None, model)                # [dc, di]
+    if name == "x_proj":
+        return pick(model, None)                # [di, r]
+    if name == "dt_proj":
+        return pick(None, model)                # [r, di]
+    if name == "A_log":
+        return pick(model, None)                # [di, ds]
+    if name == "out_proj":
+        return pick(model, dp)                  # [di, d]
+    # ---- rwkv ----------------------------------------------------------------------
+    if name in ("wr", "wk", "wv", "wg", "wo"):
+        return pick(dp, model)                  # [d, d] / [d, ff]
+    if name == "wA":
+        return pick(dp, None)
+    if name == "wB":
+        return pick(None, model)
+    # default: replicate
+    return P(*([None] * len(shape)))
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return out
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, fsdp: bool | None = None):
+    """PartitionSpec pytree matching ``init_params(cfg)``."""
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, _size(mesh, "model") if "model" in
+                          mesh.axis_names else 1)
+    data_axes, _ = _axes(mesh)
+    fsdp_axes = data_axes if fsdp else ()
+    shapes = jax.eval_shape(
+        functools.partial(T.init_params, cfg, dtype=jax.numpy.bfloat16),
+        jax.random.PRNGKey(0))
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        if "stack" in names:                  # leading period axis: unsharded
+            spec = _leaf_spec(cfg, mesh, fsdp_axes, names, shape[1:])
+            return P(None, *spec)
+        return _leaf_spec(cfg, mesh, fsdp_axes, names, shape)
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, batch: int, max_seq: int):
+    """PartitionSpec pytree for ``init_cache``: batch -> data axes, and the
+    long sequence axis of attention/MLA caches -> ``model`` (partial-softmax
+    collectives are GSPMD-inserted); SSM states shard their channel dim."""
+    data_axes, _ = _axes(mesh)
+    dp = data_axes if _ok_int(batch, mesh, data_axes) else None
+    shapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_seq, jax.numpy.bfloat16))
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        lead = 0
+        if "stack" in names:
+            lead, shape = 1, shape[1:]
+        name = names[-1]
+        if name in ("k", "v"):               # [B, S|W|C, Kv, hd]
+            seq_ax = "model" if _ok_int(shape[1], mesh, "model") else None
+            spec = P(dp, seq_ax, None, None)
+        elif name == "c_kv" or name == "k_rope":   # [B, S, lora|rope]
+            seq_ax = "model" if _ok_int(shape[1], mesh, "model") else None
+            spec = P(dp, seq_ax, None)
+        elif name == "conv":                 # [B, dc-1, di]
+            di_ax = "model" if _ok_int(shape[2], mesh, "model") else None
+            spec = P(dp, None, di_ax)
+        elif name == "ssm":                  # [B, di, ds]
+            di_ax = "model" if _ok_int(shape[1], mesh, "model") else None
+            spec = P(dp, di_ax, None)
+        elif name == "wkv":                  # [B, H, N, N]
+            h_ax = "model" if _ok_int(shape[1], mesh, "model") else None
+            spec = P(dp, h_ax, None, None)
+        elif name == "shift":                # [B, d]
+            d_ax = "model" if _ok_int(shape[1], mesh, "model") else None
+            spec = P(dp, d_ax)
+        else:
+            spec = P(*([None] * len(shape)))
+        return P(*([None] * lead), *spec)
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def _ok_int(dim: int, mesh: Mesh, axes) -> bool:
+    return _ok(dim, mesh, axes)
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Token batches shard over (pod, data) when divisible."""
+    data_axes, _ = _axes(mesh)
+    if data_axes and global_batch % _size(mesh, data_axes) == 0:
+        return P(data_axes)
+    # degrade: drop 'pod' first, then replicate
+    if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)
+
+
+def spec_tree_to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

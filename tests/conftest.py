@@ -1,0 +1,6 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run alone forces 512,
+# in its own process) — per the brief, never set the device-count flag here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,74 @@
+"""Unit tests for the channel/mobility substrate (Eqs. 3-8, Table I)."""
+import numpy as np
+import pytest
+
+from repro.channel import (ChannelParams, Mobility, RayleighAR1,
+                           shannon_rate, training_delay, upload_delay)
+
+
+@pytest.fixture
+def p():
+    return ChannelParams()
+
+
+def test_table1_constants(p):
+    assert p.K == 10 and p.v == 20.0 and p.H == 10.0 and p.d_y == 10.0
+    assert p.B == 1e5 and p.p_m == 0.1 and p.alpha == 2.0
+    assert p.sigma2 == 1e-14                       # 1e-11 mW in W
+    assert p.beta == 0.5 and p.zeta == 0.9 and p.gamma == 0.9
+
+
+def test_delta_and_data_profile(p):
+    # Section V-A: delta_i = 1.5 (i+5) 1e8 ; D_i = 2250 + 3750 i
+    assert p.delta(1) == pytest.approx(9e8)
+    assert p.delta(10) == pytest.approx(2.25e9)
+    assert p.data_count(1) == 6000 and p.data_count(10) == 39750
+
+
+def test_mobility_eq3_eq4(p):
+    mob = Mobility(p, x0=np.zeros(p.K))
+    # at t: d_x = v*t ; distance includes d_y and H offsets (Eq. 4)
+    pos = mob.position(0, 3.0)
+    assert pos[0] == pytest.approx(60.0)
+    d = mob.distance(0, 3.0)
+    assert d == pytest.approx(np.sqrt(60.0 ** 2 + 10 ** 2 + 10 ** 2))
+
+
+def test_mobility_wraparound(p):
+    mob = Mobility(p, x0=np.full(p.K, p.coverage - 1.0))
+    d1 = mob.position(0, 0.0)[0]
+    d2 = mob.position(0, 1.0)[0]           # crosses the coverage edge
+    assert d1 == pytest.approx(p.coverage - 1.0)
+    assert -p.coverage <= d2 <= p.coverage
+
+
+def test_shannon_rate_monotonic_in_distance(p):
+    r_near = shannon_rate(p, 1.0, 20.0)
+    r_far = shannon_rate(p, 1.0, 200.0)
+    assert r_near > r_far > 0
+
+
+def test_upload_delay_eq6(p):
+    rate = shannon_rate(p, 1.0, 50.0)
+    assert upload_delay(p, rate) == pytest.approx(p.model_bits / rate)
+
+
+def test_training_delay_eq8(p):
+    # C_l = D_i C_y / delta_i
+    assert training_delay(p, 1) == pytest.approx(6000 * 1e5 / 9e8)
+    assert training_delay(p, 10) == pytest.approx(39750 * 1e5 / 2.25e9)
+    # slower, data-heavier vehicles train longer
+    delays = [training_delay(p, i) for i in range(1, 11)]
+    assert delays == sorted(delays)
+
+
+def test_rayleigh_ar1_statistics(p):
+    fad = RayleighAR1(p, seed=0)
+    gains = np.array([fad.step() for _ in range(2000)])
+    # |CN(0,1)|^2 is Exp(1): mean 1
+    assert gains.mean() == pytest.approx(1.0, abs=0.15)
+    # AR(1) correlation across one slot ~ rho^2
+    x = gains[:-1].ravel()
+    y = gains[1:].ravel()
+    corr = np.corrcoef(x, y)[0, 1]
+    assert corr > 0.5

@@ -1,0 +1,105 @@
+"""Deliverable (f): per-architecture smoke tests.
+
+Every assigned arch instantiates its REDUCED variant (2 layers, d_model<=256,
+<=4 experts) and runs one forward + one train step + one decode step on CPU,
+asserting output shapes and finiteness.  The FULL configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, legal_shapes, list_archs
+from repro.launch.steps import make_train_step
+from repro.models import transformer as T
+
+ARCHS = list_archs()
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(ARCHS) == {
+        "mistral-nemo-12b", "deepseek-v2-lite-16b", "llama4-scout-17b-a16e",
+        "llama3-405b", "jamba-v0.1-52b", "musicgen-large", "rwkv6-1.6b",
+        "internvl2-2b", "qwen1.5-4b", "smollm-360m"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_limits(arch):
+    r = get_config(arch).reduced()
+    assert r.d_model <= 512
+    assert r.n_layers - r.first_k_dense <= 2 * max(r.scan_period, 1)
+    if r.n_routed_experts:
+        assert r.n_routed_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    B, S = 2, 16
+    P = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    batch = {"tokens": jax.random.randint(key, (B, S + 1), 0,
+                                          cfg.vocab_size)}
+    if P:
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, P, cfg.d_model)) * 0.02
+    logits, aux = T.forward(cfg, params, batch["tokens"][:, :-1],
+                            batch.get("patch_embeds"))
+    assert logits.shape == (B, S + P, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+
+    step = make_train_step(cfg, lr=0.1)
+    new_params, metrics = step(params, batch)
+    assert jnp.isfinite(metrics["loss"])
+    # parameters actually moved
+    moved = any(
+        not jnp.allclose(a, b) for a, b in
+        zip(jax.tree_util.tree_leaves(params),
+            jax.tree_util.tree_leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    B, MAX = 2, 32
+    cache = T.init_cache(cfg, B, MAX)
+    token = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    logits, new_cache = T.decode_step(cfg, params, token, cache,
+                                      jnp.int32(3))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_microbatched_train_matches_single(arch):
+    """Grad accumulation must be loss-equivalent to the unsplit step."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    B, S = 4, 8
+    P = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    batch = {"tokens": jax.random.randint(key, (B, S + 1), 0,
+                                          cfg.vocab_size)}
+    if P:
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, P, cfg.d_model)) * 0.02
+    _, m1 = make_train_step(cfg)(params, batch)
+    _, m2 = make_train_step(cfg.variant(microbatches=2))(params, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=2e-3)
+
+
+def test_long_context_legality():
+    legal = {a: "long_500k" in legal_shapes(get_config(a)) for a in ARCHS}
+    assert legal["rwkv6-1.6b"] and legal["jamba-v0.1-52b"] \
+        and legal["llama4-scout-17b-a16e"]
+    assert not legal["llama3-405b"] and not legal["qwen1.5-4b"] \
+        and not legal["mistral-nemo-12b"]       # base config (SWA variant is)
+    from repro.configs.mistral_nemo_12b import sliding_window_variant
+    assert sliding_window_variant().supports_long_context

@@ -1,0 +1,55 @@
+"""Hierarchical multi-pod MAFL (beyond paper): pod-local aggregation +
+cross-pod reconciliation, run on a small in-process device mesh via a
+subprocess with forced host devices (tests must normally see ONE device, so
+the multi-device check runs isolated)."""
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hierarchical import pod_local_mafl
+
+
+def test_pod_local_update_matches_mixing_rule():
+    g = {"w": jnp.ones((4,))}
+    l = {"w": jnp.full((4,), 3.0)}
+    out = pod_local_mafl(g, l, beta=0.5, weight=0.8)
+    alpha = 0.5 * 0.8
+    np.testing.assert_allclose(out["w"], (1 - alpha) * 1 + alpha * 3,
+                               rtol=1e-6)
+
+
+def test_cross_pod_reconcile_on_multidevice_mesh():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.hierarchical import (cross_pod_reconcile,
+                                             make_hierarchical_round)
+
+        mesh = jax.make_mesh((2, 2), ("pod", "data"))
+        # per-pod models differ: pod 0 holds 1.0, pod 1 holds 3.0
+        arr = jnp.concatenate([jnp.ones((2, 4)), jnp.full((2, 4), 3.0)])
+        sharded = jax.device_put(arr,
+                                 NamedSharding(mesh, P(("pod", "data"))))
+        with jax.set_mesh(mesh):
+            rec = cross_pod_reconcile({"w": sharded}, mesh)
+        np.testing.assert_allclose(np.asarray(rec["w"]), 2.0)
+
+        # a full round with reconcile_every=1 must also average
+        with jax.set_mesh(mesh):
+            round_fn = make_hierarchical_round(mesh, beta=0.5,
+                                               reconcile_every=1)
+            out = jax.jit(round_fn)(jnp.int32(0), {"w": sharded},
+                                    {"w": sharded}, jnp.float32(1.0))
+        np.testing.assert_allclose(np.asarray(out["w"]), 2.0)
+        print("HIERARCHICAL_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "HIERARCHICAL_OK" in res.stdout, res.stderr[-2000:]

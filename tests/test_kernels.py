@@ -1,0 +1,177 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode),
+plus hypothesis property tests — deliverable (c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cross_entropy import ops as ce_ops, ref as ce_ref
+from repro.kernels.decode_attention import ops as dec_ops, ref as dec_ref
+from repro.kernels.swa_attention import ops as swa_ops, ref as swa_ref
+from repro.kernels.weighted_agg import ops as agg_ops, ref as agg_ref
+
+
+# ---------------------------------------------------------------------------
+# weighted_agg (the paper's Eq. 10+11 fused)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(128,), (1000,), (513, 7), (32, 128),
+                                   (100,), (4, 4, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_weighted_agg_shapes_dtypes(shape, dtype):
+    g = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    l = jax.random.normal(jax.random.PRNGKey(1), shape).astype(dtype)
+    out_k = agg_ops.weighted_agg_leaf(g, l, 0.5, 0.93)
+    out_r = agg_ref.weighted_agg(g, l, 0.5, 0.93)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=tol)
+    assert out_k.dtype == g.dtype and out_k.shape == g.shape
+
+
+@given(st.integers(1, 2000), st.floats(0.05, 0.95), st.floats(0.0, 1.3))
+@settings(max_examples=20, deadline=None)
+def test_weighted_agg_property(n, beta, weight):
+    g = jnp.linspace(-2, 2, n)
+    l = jnp.linspace(3, -1, n)
+    out = agg_ops.weighted_agg_leaf(g, l, beta, weight)
+    expect = beta * g + (1 - beta) * weight * l
+    np.testing.assert_allclose(out, expect, atol=1e-5)
+
+
+def test_weighted_agg_tree_matches_treemap():
+    tree_g = {"a": jnp.ones((300,)), "b": {"c": jnp.full((5, 40), 2.0)}}
+    tree_l = {"a": jnp.full((300,), 3.0), "b": {"c": jnp.ones((5, 40))}}
+    out = agg_ops.weighted_agg_tree(tree_g, tree_l, 0.5, 1.0)
+    np.testing.assert_allclose(out["a"], 2.0 * jnp.ones(300), atol=1e-6)
+    np.testing.assert_allclose(out["b"]["c"], 1.5 * jnp.ones((5, 40)),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cross_entropy (Eq. 1 over large vocab)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,V", [(128, 2048), (64, 4096), (100, 3000),
+                                 (8, 512), (256, 1111)])
+def test_cross_entropy_vs_ref(R, V):
+    logits = (jax.random.normal(jax.random.PRNGKey(0), (R, V)) * 3)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (R,), 0, V)
+    np.testing.assert_allclose(ce_ops.cross_entropy(logits, labels),
+                               ce_ref.cross_entropy(logits, labels),
+                               atol=1e-4)
+
+
+def test_cross_entropy_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0, 5.0] * 128] * 8)
+    labels = jnp.zeros((8,), jnp.int32)
+    out = ce_ops.cross_entropy(logits, labels)
+    assert jnp.isfinite(out).all()
+    np.testing.assert_allclose(out, ce_ref.cross_entropy(logits, labels),
+                               atol=1e-3)
+
+
+@given(st.integers(2, 64), st.integers(16, 600))
+@settings(max_examples=15, deadline=None)
+def test_cross_entropy_property(R, V):
+    logits = jax.random.normal(jax.random.PRNGKey(R * V), (R, V))
+    labels = jnp.arange(R) % V
+    out = ce_ops.cross_entropy(logits, labels)
+    # NLL is non-negative and finite
+    assert (np.asarray(out) >= 0).all() and np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, ce_ref.cross_entropy(logits, labels),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# swa_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,Kv,hd,W,bq,bk", [
+    (1, 128, 2, 2, 32, 32, 32, 32),
+    (2, 256, 4, 2, 64, 64, 64, 64),
+    (1, 128, 4, 1, 32, 64, 64, 32),
+    (1, 256, 2, 2, 32, 96, 32, 32),
+    (1, 64, 2, 2, 32, 33, 32, 32),       # W not a multiple of block
+    (1, 128, 2, 1, 32, 200, 64, 32),     # W > S
+])
+def test_swa_attention_vs_ref(B, S, H, Kv, hd, W, bq, bk):
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Kv, hd))
+    out_k = swa_ops.swa_attention(q, k, v, W, block_q=bq, block_k=bk)
+    out_r = swa_ref.swa_attention(q, k, v, W)
+    np.testing.assert_allclose(out_k, out_r, atol=1e-4)
+
+
+def test_swa_kernel_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 2, 32),
+                          jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 2, 32),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 2, 32),
+                          jnp.bfloat16)
+    out_k = swa_ops.swa_attention(q, k, v, 64, block_q=64, block_k=64)
+    out_r = swa_ref.swa_attention(q, k, v, 64)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention (one token vs KV cache — the decode-shape hot-spot)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,Kv,hd,bs,pos", [
+    (2, 256, 4, 2, 32, 64, 200),
+    (1, 512, 8, 8, 64, 128, 511),
+    (2, 128, 6, 2, 32, 32, 5),        # mostly-masked cache
+    (1, 1024, 4, 1, 64, 256, 700),    # MQA grouping
+])
+def test_decode_attention_vs_ref(B, S, H, Kv, hd, bs, pos):
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Kv, hd))
+    out_k = dec_ops.decode_attention(q, k, v, pos, block_s=bs)
+    out_r = dec_ref.decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(out_k, out_r, atol=1e-4)
+
+
+def test_decode_attention_matches_model_decode_path():
+    """Kernel == the model's jnp full-attention decode (same math)."""
+    from repro.configs import get_config
+    from repro.models import attention as model_attn
+    from repro.models.modules import apply_rope
+    cfg = get_config("internvl2-2b").reduced()
+    key = jax.random.PRNGKey(0)
+    p = model_attn.init_attention(cfg, key, jnp.float32)
+    cache = model_attn.init_attn_cache(cfg, 2, 64, "full", 0, jnp.float32)
+    # pre-fill a few slots
+    for t in range(5):
+        x = jax.random.normal(jax.random.PRNGKey(10 + t),
+                              (2, 1, cfg.d_model)) * 0.3
+        y_model, cache = model_attn.attention_decode(cfg, p, x, cache,
+                                                     jnp.int32(t))
+    # compare the final step's attention against the kernel
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = apply_rope(q, jnp.array([4]), cfg.rope_theta)[:, 0]
+    out = dec_ops.decode_attention(q, cache["k"], cache["v"], 4, block_s=32)
+    y_kernel = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    np.testing.assert_allclose(y_model, y_kernel, atol=2e-4)
+
+
+def test_swa_kernel_agrees_with_model_swa_path():
+    """Kernel == the model's jnp SWA attention (same math, two impls)."""
+    from repro.configs import get_config
+    from repro.models import attention as model_attn
+    cfg = get_config("mistral-nemo-12b").reduced().variant(sliding_window=64)
+    key = jax.random.PRNGKey(0)
+    p = model_attn.init_attention(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 128, cfg.d_model)) * 0.3
+    pos = jnp.arange(128, dtype=jnp.int32)
+    y_model, _ = model_attn.attention_fwd(cfg, p, x, pos, "swa", 64)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    from repro.models.modules import apply_rope
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    out = swa_ops.swa_attention(q, k, v, 64, block_q=64, block_k=64)
+    y_kernel = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    np.testing.assert_allclose(y_model, y_kernel, atol=2e-4)

@@ -1,0 +1,83 @@
+"""Launcher-layer tests: input_specs per shape kind, mesh factory contracts.
+
+(`repro.launch.dryrun` itself is exercised end-to-end by the recorded matrix
+— importing it here would force 512 host devices onto the test process.)
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.configs.shapes import SHAPES
+from repro.launch.steps import cache_shapes, input_specs, param_shapes
+
+
+def test_shapes_registry_matches_brief():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_train_input_specs_are_structs():
+    cfg = get_config("smollm-360m")
+    specs = input_specs(cfg, get_shape("train_4k"))
+    assert isinstance(specs["tokens"], jax.ShapeDtypeStruct)
+    assert specs["tokens"].shape == (256, 4097)          # +1 for targets
+
+
+def test_vlm_input_specs_reserve_frontend_tokens():
+    cfg = get_config("internvl2-2b")
+    specs = input_specs(cfg, get_shape("train_4k"))
+    # text tokens + 256 patch embeds == seq_len
+    assert specs["tokens"].shape == (256, 4096 - 256 + 1)
+    assert specs["patch_embeds"].shape == (256, 256, 2048)
+
+
+def test_decode_input_specs_have_full_cache():
+    cfg = get_config("mistral-nemo-12b")
+    specs = input_specs(cfg, get_shape("decode_32k"))
+    assert specs["token"].shape == (128, 1)
+    k = specs["cache"]["stack"]["sub0"]["mixer"]["k"]
+    assert k.shape == (40, 128, 32768, 8, 128)           # periods leading
+    assert specs["pos"].shape == ()
+
+
+def test_swa_variant_cache_is_window_sized():
+    from repro.configs.mistral_nemo_12b import sliding_window_variant
+    cfg = sliding_window_variant(4096)
+    specs = input_specs(cfg, get_shape("long_500k"))
+    k = specs["cache"]["stack"]["sub0"]["mixer"]["k"]
+    assert k.shape[2] == 4096                            # ring, not 524288
+
+
+def test_rwkv_long_cache_is_constant_size():
+    cfg = get_config("rwkv6-1.6b")
+    specs = input_specs(cfg, get_shape("long_500k"))
+    wkv = specs["cache"]["stack"]["sub0"]["mixer"]["wkv"]
+    assert wkv.shape == (24, 1, 32, 64, 64)              # O(1) in seq_len
+    # total state bytes are tiny vs a KV cache
+    total = sum(s.size for s in jax.tree_util.tree_leaves(specs["cache"]))
+    assert total < 50_000_000
+
+
+def test_param_shapes_eval_only():
+    """llama3-405b param shapes must come back instantly (no allocation)."""
+    shapes = param_shapes(get_config("llama3-405b"))
+    leaves = jax.tree_util.tree_leaves(shapes)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    import math
+    n = sum(math.prod(l.shape) for l in leaves)
+    assert n > 3.8e11
+
+
+def test_mesh_factory_is_lazy():
+    """Importing mesh.py must not construct device meshes."""
+    import importlib
+    import repro.launch.mesh as m
+    importlib.reload(m)                                  # no exception = ok
+    host = m.make_host_mesh()
+    assert host.shape == {"data": 1, "model": 1}

@@ -1,0 +1,207 @@
+"""Model-zoo unit tests: attention variants, MoE, Mamba, RWKV6, assembly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import transformer as T
+from repro.models.modules import apply_rope, chunked_scan
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def test_rope_preserves_norm_and_relativity():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (1, 6, 2, 32))
+    pos = jnp.arange(6)
+    y = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(x, axis=-1),
+                               np.linalg.norm(y, axis=-1), rtol=1e-5)
+    # relative property: <q_i, k_j> depends only on i-j
+    q = jax.random.normal(k, (1, 1, 1, 32))
+    kk = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    def dot_at(i, j):
+        qi = apply_rope(jnp.broadcast_to(q, (1, 1, 1, 32)), jnp.array([i]), 1e4)
+        kj = apply_rope(jnp.broadcast_to(kk, (1, 1, 1, 32)), jnp.array([j]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(5, 3) == pytest.approx(dot_at(7, 5), rel=1e-4)
+
+
+def test_blocked_sdpa_matches_dense():
+    """The q-blocked flash-style path must equal the dense path."""
+    cfg = get_config("smollm-360m").reduced()
+    key = jax.random.PRNGKey(0)
+    p = attn.init_attention(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (2, 2048, cfg.d_model)) * 0.1
+    pos = jnp.arange(2048, dtype=jnp.int32)
+    y_blocked, _ = attn.attention_fwd(cfg, p, x, pos)      # S=2048 -> blocked
+    old = attn.BLOCKED_SDPA_THRESHOLD
+    attn.BLOCKED_SDPA_THRESHOLD = 10 ** 9                  # force dense
+    try:
+        y_dense, _ = attn.attention_fwd(cfg, p, x, pos)
+    finally:
+        attn.BLOCKED_SDPA_THRESHOLD = old
+    np.testing.assert_allclose(y_blocked, y_dense, atol=2e-4)
+
+
+def test_swa_masks_out_of_window():
+    cfg = get_config("mistral-nemo-12b").reduced().variant(sliding_window=4)
+    key = jax.random.PRNGKey(0)
+    p = attn.init_attention(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 12, cfg.d_model)) * 0.1
+    pos = jnp.arange(12, dtype=jnp.int32)
+    y1, _ = attn.attention_fwd(cfg, p, x, pos, "swa", 4)
+    # perturbing a token >= window away must not change the output at t
+    x2 = x.at[:, 0].add(10.0)
+    y2, _ = attn.attention_fwd(cfg, p, x2, pos, "swa", 4)
+    np.testing.assert_allclose(y1[:, 8:], y2[:, 8:], atol=1e-5)
+    assert not np.allclose(y1[:, 0], y2[:, 0])
+
+
+def test_mla_absorbed_decode_matches_naive():
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    key = jax.random.PRNGKey(0)
+    p = attn.init_mla(cfg, key, jnp.float32)
+    cache = attn.init_mla_cache(cfg, 2, 16, jnp.float32)
+    x = jax.random.normal(key, (2, 1, cfg.d_model)) * 0.1
+    y_naive, c1 = attn.mla_decode(cfg, p, x, cache, jnp.int32(3))
+    cfg2 = cfg.variant(mla_absorb=True)
+    y_abs, c2 = attn.mla_decode(cfg2, p, x, cache, jnp.int32(3))
+    np.testing.assert_allclose(y_naive, y_abs, atol=1e-4)
+    np.testing.assert_allclose(c1["c_kv"], c2["c_kv"], atol=1e-6)
+
+
+def test_chunk_attention_blocks_cross_chunk():
+    cfg = get_config("llama4-scout-17b-a16e").reduced().variant(attn_chunk=4)
+    key = jax.random.PRNGKey(0)
+    p = attn.init_attention(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 8, cfg.d_model)) * 0.1
+    pos = jnp.arange(8, dtype=jnp.int32)
+    y1, _ = attn.attention_fwd(cfg, p, x, pos, "chunk", 4)
+    x2 = x.at[:, 1].add(10.0)                  # chunk 0
+    y2, _ = attn.attention_fwd(cfg, p, x2, pos, "chunk", 4)
+    np.testing.assert_allclose(y1[:, 4:], y2[:, 4:], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def test_moe_router_mass_conservation():
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    gates, idx, aux = moe_mod._router(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+    assert (np.asarray(idx) < cfg.n_routed_experts).all()
+    assert float(aux) >= 0
+
+
+def test_moe_dispatch_equals_dense_at_high_capacity():
+    """With no drops, sort-dispatch == dense masked combine."""
+    cfg = get_config("deepseek-v2-lite-16b").reduced().variant(
+        capacity_factor=16.0, n_shared_experts=0)
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model)) * 0.3
+    y_dispatch, _ = moe_mod.moe_fwd(cfg, p, x)
+    y_dense = jnp.concatenate(
+        [moe_mod.moe_decode(cfg, p, x[:, i:i + 1])[0] for i in range(8)],
+        axis=1)
+    np.testing.assert_allclose(y_dispatch, y_dense, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = get_config("deepseek-v2-lite-16b").reduced().variant(
+        capacity_factor=0.1, n_shared_experts=0)
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+    y, _ = moe_mod.moe_fwd(cfg, p, x)
+    assert jnp.isfinite(y).all()
+    # with tiny capacity most tokens must be dropped (zero output rows)
+    row_norms = jnp.linalg.norm(y[0], axis=-1)
+    assert (row_norms < 1e-6).sum() >= 4
+
+
+# ---------------------------------------------------------------------------
+# SSM blocks
+# ---------------------------------------------------------------------------
+def test_chunked_scan_equals_plain_scan():
+    def body(c, x):
+        c = 0.9 * c + x
+        return c, c * 2.0
+    xs = jax.random.normal(jax.random.PRNGKey(0), (128, 3))
+    c1, y1 = jax.lax.scan(body, jnp.zeros(3), xs)
+    c2, y2 = chunked_scan(body, jnp.zeros(3), xs, 16)
+    np.testing.assert_allclose(c1, c2, rtol=1e-6)
+    np.testing.assert_allclose(y1, y2, rtol=1e-6)
+
+
+def test_mamba_fwd_decode_parity():
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    p = mamba_mod.init_mamba(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, cfg.d_model)) * 0.3
+    y_full, cache_full = mamba_mod.mamba_fwd(cfg, p, x)
+    cache = mamba_mod.init_mamba_cache(cfg, 2, jnp.float32)
+    ys = []
+    for t in range(6):
+        y_t, cache = mamba_mod.mamba_decode(cfg, p, x[:, t:t + 1], cache)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_full, y_step, atol=1e-4)
+    np.testing.assert_allclose(cache_full["ssm"], cache["ssm"], atol=1e-4)
+
+
+def test_rwkv_fwd_decode_parity():
+    cfg = get_config("rwkv6-1.6b").reduced()
+    p = rwkv_mod.init_time_mix(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, cfg.d_model)) * 0.3
+    y_full, cache_full = rwkv_mod.time_mix_fwd(cfg, p, x)
+    cache = {"wkv": jnp.zeros_like(cache_full["wkv"]),
+             "shift": jnp.zeros((2, cfg.d_model))}
+    ys = []
+    for t in range(5):
+        y_t, cache = rwkv_mod.time_mix_decode(cfg, p, x[:, t:t + 1], cache)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_full, y_step, atol=1e-4)
+    np.testing.assert_allclose(cache_full["wkv"], cache["wkv"], atol=1e-4)
+
+
+def test_rwkv_decay_in_unit_interval():
+    cfg = get_config("rwkv6-1.6b").reduced()
+    p = rwkv_mod.init_time_mix(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+    _, _, _, w, _ = rwkv_mod._tm_projections(cfg, p, x, jnp.zeros_like(x))
+    assert (np.asarray(w) > 0).all() and (np.asarray(w) < 1).all()
+
+
+# ---------------------------------------------------------------------------
+# assembly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-1.6b",
+                                  "jamba-v0.1-52b", "deepseek-v2-lite-16b"])
+def test_prefill_decode_match_forward(arch):
+    cfg = get_config(arch).reduced().variant(capacity_factor=16.0)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 9), 0, cfg.vocab_size)
+    full_logits, _ = T.forward(cfg, params, toks)
+    _, cache = T.prefill(cfg, params, toks[:, :8])
+    cache = T.grow_cache(cfg, cache, 2, 16)
+    dl, _ = T.decode_step(cfg, params, toks[:, 8:9], cache, jnp.int32(8))
+    np.testing.assert_allclose(dl[:, 0], full_logits[:, 8], atol=2e-3)
+
+
+def test_param_count_sane():
+    n = T.param_count(get_config("smollm-360m"))
+    assert 3.4e8 < n < 4.1e8
+    n405 = T.param_count(get_config("llama3-405b"))
+    assert 3.8e11 < n405 < 4.3e11
+    # active < total for MoE
+    ds = get_config("deepseek-v2-lite-16b")
+    assert T.param_count(ds, active_only=True) < T.param_count(ds)

@@ -1,0 +1,63 @@
+"""Continuous-batching server: slot admission, per-slot positions, drain."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import BatchedServer
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-360m").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_server_drains_requests(served):
+    cfg, params = served
+    srv = BatchedServer(cfg, params, n_slots=2, max_seq=32)
+    reqs = [srv.submit(np.arange(4) + i, max_new=5) for i in range(3)]
+    ticks = srv.run_until_drained(max_ticks=100)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 5 for r in reqs)
+    assert ticks < 100
+    # 3 requests over 2 slots => the third admits after a slot frees
+    assert srv.pending() == 0 and srv.active() == 0
+
+
+def test_server_matches_unbatched_decode(served):
+    """Slot-pooled decode must equal a dedicated single-sequence decode."""
+    cfg, params = served
+    prompt = np.arange(6, dtype=np.int32)
+    srv = BatchedServer(cfg, params, n_slots=2, max_seq=32)
+    r = srv.submit(prompt, max_new=4)
+    # occupy the other slot with a different request to prove isolation
+    srv.submit(np.arange(3, dtype=np.int32) + 7, max_new=6)
+    srv.run_until_drained()
+
+    # reference: plain prefill + sequential greedy decode
+    import jax.numpy as jnp
+    logits, cache = T.prefill(cfg, params, jnp.asarray(prompt[None]))
+    cache = T.grow_cache(cfg, cache, 1, 32)
+    tok = int(jnp.argmax(logits[0, -1]))
+    expect = [tok]
+    pos = len(prompt)
+    for _ in range(3):
+        lg, cache = T.decode_step(cfg, params,
+                                  jnp.asarray([[tok]], jnp.int32), cache,
+                                  jnp.int32(pos))
+        tok = int(jnp.argmax(lg[0, 0]))
+        expect.append(tok)
+        pos += 1
+    assert r.out == expect
+
+
+def test_server_eos_frees_slot(served):
+    cfg, params = served
+    srv = BatchedServer(cfg, params, n_slots=1, max_seq=32, eos_id=None)
+    r1 = srv.submit(np.arange(4, dtype=np.int32), max_new=3)
+    r2 = srv.submit(np.arange(4, dtype=np.int32) + 2, max_new=3)
+    srv.run_until_drained()
+    assert r1.done and r2.done

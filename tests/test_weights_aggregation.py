@@ -1,0 +1,124 @@
+"""The paper's core math: delay weights (Eqs. 7, 9, 10) and aggregation
+(Eq. 11) + baselines, including hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.channel.params import ChannelParams
+from repro.core import (FedBuffAggregator, afl_update, fedasync_update,
+                        fedavg_update, mafl_update)
+from repro.core.weights import (combined_weight, training_weight,
+                                upload_weight, weighted_local_model)
+
+P = ChannelParams()
+
+
+def test_upload_weight_eq7():
+    assert upload_weight(P, 1.0) == pytest.approx(1.0)       # gamma^0
+    assert upload_weight(P, 2.0) == pytest.approx(0.9)       # gamma^1
+    assert upload_weight(P, 0.0) == pytest.approx(1.0 / 0.9)
+
+
+def test_training_weight_eq9():
+    assert training_weight(P, 1.0) == pytest.approx(1.0)
+    assert training_weight(P, 11.0) == pytest.approx(0.9 ** 10)
+
+
+@given(st.floats(0.0, 50.0), st.floats(0.0, 50.0))
+@settings(max_examples=50, deadline=None)
+def test_weights_monotone_decreasing(d1, d2):
+    """Eq. 7/9: larger delay => smaller weight (staleness discount)."""
+    if d1 < d2:
+        assert upload_weight(P, d1) >= upload_weight(P, d2)
+        assert training_weight(P, d1) >= training_weight(P, d2)
+    assert combined_weight(P, d1, d2) == pytest.approx(
+        upload_weight(P, d1) * training_weight(P, d2), rel=1e-6)
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (4, 3)) * scale,
+            "b": {"c": jax.random.normal(k2, (7,)) * scale}}
+
+
+def test_weighted_local_model_eq10():
+    t = _tree(jax.random.PRNGKey(0))
+    w = weighted_local_model(t, 0.7)
+    np.testing.assert_allclose(w["a"], 0.7 * t["a"], rtol=1e-6)
+
+
+def test_afl_update_eq11():
+    g, l = _tree(jax.random.PRNGKey(0)), _tree(jax.random.PRNGKey(1))
+    out = afl_update(g, l, beta=0.5)
+    np.testing.assert_allclose(out["b"]["c"], 0.5 * g["b"]["c"] +
+                               0.5 * l["b"]["c"], rtol=1e-6)
+
+
+def test_mafl_update_literal_matches_equations():
+    g, l = _tree(jax.random.PRNGKey(0)), _tree(jax.random.PRNGKey(1))
+    out = mafl_update(g, l, beta=0.5, weight=0.8, interpretation="literal")
+    np.testing.assert_allclose(out["a"], 0.5 * g["a"] + 0.5 * 0.8 * l["a"],
+                               rtol=1e-6)
+
+
+def test_mafl_update_mixing_is_convex():
+    g, l = _tree(jax.random.PRNGKey(0)), _tree(jax.random.PRNGKey(1))
+    out = mafl_update(g, l, beta=0.5, weight=0.8)
+    alpha = 0.5 * 0.8
+    np.testing.assert_allclose(out["a"], (1 - alpha) * g["a"] +
+                               alpha * l["a"], rtol=1e-6)
+
+
+def test_mafl_kernel_path_matches_jnp():
+    g, l = _tree(jax.random.PRNGKey(2)), _tree(jax.random.PRNGKey(3))
+    for interp in ("literal", "mixing"):
+        a = mafl_update(g, l, 0.5, 0.93, use_kernel=False,
+                        interpretation=interp)
+        b = mafl_update(g, l, 0.5, 0.93, use_kernel=True,
+                        interpretation=interp)
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)):
+            np.testing.assert_allclose(x, y, atol=1e-6)
+
+
+@given(st.floats(0.05, 0.95), st.floats(0.1, 1.2))
+@settings(max_examples=30, deadline=None)
+def test_mixing_update_stays_in_hull(beta, weight):
+    """Convex mixing keeps every coordinate inside [min(g,l), max(g,l)]."""
+    g, l = _tree(jax.random.PRNGKey(4)), _tree(jax.random.PRNGKey(5))
+    out = mafl_update(g, l, beta, weight)
+    for og, ol, oo in zip(jax.tree_util.tree_leaves(g),
+                          jax.tree_util.tree_leaves(l),
+                          jax.tree_util.tree_leaves(out)):
+        lo = np.minimum(og, ol) - 1e-6
+        hi = np.maximum(og, ol) + 1e-6
+        assert ((oo >= lo) & (oo <= hi)).all()
+
+
+def test_fedavg_weighted_mean():
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    out = fedavg_update(trees[0], trees, sizes=[1, 1, 2])
+    expect = (trees[0]["a"] + trees[1]["a"] + 2 * trees[2]["a"]) / 4
+    np.testing.assert_allclose(out["a"], expect, rtol=1e-5)
+
+
+def test_fedasync_staleness_discount():
+    g, l = _tree(jax.random.PRNGKey(0)), _tree(jax.random.PRNGKey(1))
+    fresh = fedasync_update(g, l, 0.5, staleness=0.0)
+    stale = fedasync_update(g, l, 0.5, staleness=100.0)
+    # stale update moves less far from g
+    d_fresh = np.abs(fresh["a"] - g["a"]).sum()
+    d_stale = np.abs(stale["a"] - g["a"]).sum()
+    assert d_stale < d_fresh
+
+
+def test_fedbuff_aggregates_every_k():
+    g = _tree(jax.random.PRNGKey(0))
+    agg = FedBuffAggregator(buffer_size=2)
+    out1, fired1 = agg.add(g, _tree(jax.random.PRNGKey(1)))
+    assert not fired1
+    out2, fired2 = agg.add(g, _tree(jax.random.PRNGKey(2)))
+    assert fired2
+    assert not np.allclose(out2["a"], g["a"])
