@@ -4,6 +4,8 @@
   fig5       — beta sweep at 10 rounds (Fig. 5)
   kernels    — Pallas kernel micro + v5e roofline projections (CSV rows)
   roofline   — render the dry-run roofline tables (deliverable g)
+  scenario   — run a named scenario from the registry (DESIGN.md §8):
+               ``python -m benchmarks.run scenario fleet-k100 [rounds]``
 
 ``python -m benchmarks.run``            runs everything (QUICK=1 shrinks the
 simulation rounds for CI-speed smoke runs).
@@ -15,11 +17,36 @@ import os
 import sys
 import time
 
+# before any jax import: the legacy CPU runtime runs the paper CNN's train
+# step ~15% faster than the thunk runtime on this host (benchmarks only —
+# the library itself never forces backend flags)
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_use_thunk_runtime=false")
+
+
+def run_scenario_cmd(argv) -> None:
+    from repro.core.scenarios import list_scenarios, run_scenario
+    if not argv:
+        print("available scenarios:", ", ".join(list_scenarios()))
+        return
+    name = argv[0]
+    kw = {"rounds": int(argv[1])} if len(argv) > 1 else {}
+    t0 = time.time()
+    r = run_scenario(name, progress=lambda rd, a: print(
+        f"  round {rd}: acc={a:.3f}"), **kw)
+    dt = time.time() - t0
+    print(f"{name}: {len(r.rounds)} rounds in {dt:.1f}s "
+          f"({len(r.rounds) / max(dt, 1e-9):.2f} rounds/s), "
+          f"final acc {r.final_accuracy():.3f}")
+
 
 def main() -> None:
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     quick = bool(int(os.environ.get("QUICK", "0")))
     t0 = time.time()
+
+    if which == "scenario":
+        run_scenario_cmd(sys.argv[2:])
+        return
 
     if which in ("all", "kernels"):
         print("== kernel microbenchmarks ==")

@@ -1,30 +1,36 @@
 """Quickstart: the paper in miniature.
 
-Ten vehicles with Table-I heterogeneity train the paper's CNN on private
-shards of a synthetic-MNIST substitute; the RSU aggregates asynchronously.
-Compares MAFL (the paper) against conventional AFL (the baseline) for a few
-rounds and prints both accuracy curves.
+The ``paper-k10`` scenario from the registry (DESIGN.md §8) — ten vehicles
+with Table-I heterogeneity training the paper's CNN on private shards of a
+synthetic-MNIST substitute, the RSU aggregating asynchronously on the
+vehicle-batched wave engine.  Compares MAFL (the paper) against
+conventional AFL (the baseline) for a few rounds and prints both accuracy
+curves.  Any registered world works the same way, e.g.::
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # paper-k10
+    PYTHONPATH=src python examples/quickstart.py fleet-k100
 """
+import sys
 import time
 
-from repro.channel.params import ChannelParams
+from repro.core.scenarios import build_world, get_scenario, list_scenarios
 from repro.core import run_simulation
-from repro.data import partition_vehicles, synth_mnist
 
 
 def main():
+    name = sys.argv[1] if len(sys.argv) > 1 else "paper-k10"
+    print("registered scenarios:", ", ".join(list_scenarios()))
+    sc = get_scenario(name)
     t0 = time.time()
-    tr_i, tr_l, te_i, te_l = synth_mnist(n_train=4000, n_test=500, seed=0,
-                                         noise=0.5)
-    p = ChannelParams()
-    vehicles = partition_vehicles(tr_i, tr_l, p, seed=0, scale=0.01)
-    print("per-vehicle D_i:", [v.size for v in vehicles])
+    vehicles, te_i, te_l, p = build_world(sc, seed=0)
+    print(f"{name}: K={p.K}, per-vehicle D_i:",
+          [v.size for v in vehicles[:12]],
+          "..." if p.K > 12 else "")
 
     for scheme in ("mafl", "afl"):
         r = run_simulation(vehicles, te_i, te_l, scheme=scheme, rounds=12,
-                           l_iters=8, lr=0.05, eval_every=4, seed=0)
+                           l_iters=8, lr=0.05, eval_every=4, seed=0,
+                           params=p)
         curve = ", ".join(f"r{rd}={a:.3f}" for rd, a in r.acc_history)
         print(f"{scheme:5s}: {curve}")
     print(f"done in {time.time() - t0:.0f}s")

@@ -1,7 +1,7 @@
 from repro.channel.mobility import Mobility
-from repro.channel.fading import RayleighAR1
+from repro.channel.fading import RayleighAR1, SlotGainCache
 from repro.channel.rate import shannon_rate, upload_delay, training_delay
 from repro.channel.params import ChannelParams
 
-__all__ = ["Mobility", "RayleighAR1", "shannon_rate", "upload_delay",
+__all__ = ["Mobility", "RayleighAR1", "SlotGainCache", "shannon_rate", "upload_delay",
            "training_delay", "ChannelParams"]

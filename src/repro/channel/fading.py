@@ -25,5 +25,61 @@ class RayleighAR1:
         self.g = rho * self.g + np.sqrt(1 - rho ** 2) * innov
         return np.abs(self.g) ** 2
 
+    def steps_block(self, n: int) -> np.ndarray:
+        """Advance ``n`` slots; returns gains for each, shape [n, K].
+
+        Bit-identical to ``n`` successive :meth:`step` calls (the (n, 2, K)
+        normal draw consumes the generator's bitstream in exactly the
+        real/imag per-slot order the scalar path uses) but with one RNG call
+        instead of 2n — the fast path when a long-delay event forces the
+        simulator to catch the channel up over many slots at once."""
+        if n <= 0:
+            return np.empty((0, self.p.K))
+        rho = self.p.fading_rho
+        innov = self.rng.normal(size=(n, 2, self.p.K))
+        innov = (innov[:, 0] + 1j * innov[:, 1]) / np.sqrt(2)
+        out = np.empty((n, self.p.K))
+        scale = np.sqrt(1 - rho ** 2)
+        g = self.g
+        for t in range(n):
+            g = rho * g + scale * innov[t]
+            out[t] = np.abs(g) ** 2
+        self.g = g
+        return out
+
     def gain(self, i: int) -> float:
         return float(np.abs(self.g[i]) ** 2)
+
+
+class SlotGainCache:
+    """Windowed per-slot gain cache over a :class:`RayleighAR1` process.
+
+    Gains are sampled once per discrete slot ``int(t)`` and kept only for
+    the live window: the simulation prunes slots older than the earliest
+    pending event every round (the time-ordered consumer can never revisit
+    them), so memory is bounded by the event horizon rather than the
+    simulation length (DESIGN.md §2)."""
+
+    def __init__(self, fading: RayleighAR1):
+        self._fading = fading
+        self._cache: dict[int, np.ndarray] = {}
+        self._last_slot = -1
+
+    def at(self, t: float) -> np.ndarray:
+        """Gains h^i(int(t)), advancing the AR(1) chain as needed."""
+        slot = int(t)
+        if slot > self._last_slot:
+            block = self._fading.steps_block(slot - self._last_slot)
+            for j in range(block.shape[0]):
+                self._cache[self._last_slot + 1 + j] = block[j]
+            self._last_slot = slot
+        return self._cache[slot]
+
+    def prune_below(self, t: float) -> None:
+        """Drop every slot older than ``int(t)``."""
+        keep = int(t)
+        for s in [s for s in self._cache if s < keep]:
+            del self._cache[s]
+
+    def __len__(self) -> int:
+        return len(self._cache)

@@ -1,20 +1,25 @@
 """The paper's primary contribution: mobility-aware asynchronous federated
 learning (MAFL) — delay weights (Eqs. 3-9), weighted aggregation (Eqs. 10-11),
-the RSU server, vehicle clients, and the event-driven async scheduler."""
+the RSU server, vehicle clients, the event-driven async scheduler, and the
+named-scenario registry for launching fleets of any size."""
 from repro.core.aggregation import (FedBuffAggregator, afl_update,
                                     fedasync_update, fedavg_update,
-                                    mafl_update)
-from repro.core.client import Vehicle, VehicleData
+                                    mafl_update, mix_update_donated)
+from repro.core.client import Vehicle, VehicleData, local_update_many
 from repro.core.events import EventQueue, UploadEvent
 from repro.core.mafl import SimResult, evaluate, run_simulation
+from repro.core.scenarios import (Scenario, build_world, get_scenario,
+                                  list_scenarios, run_scenario)
 from repro.core.server import RSUServer, RoundRecord
 from repro.core.weights import (combined_weight, training_weight,
                                 upload_weight, weighted_local_model)
 
 __all__ = [
     "FedBuffAggregator", "afl_update", "fedasync_update", "fedavg_update",
-    "mafl_update", "Vehicle", "VehicleData", "EventQueue", "UploadEvent",
-    "SimResult", "evaluate", "run_simulation", "RSUServer", "RoundRecord",
+    "mafl_update", "mix_update_donated", "Vehicle", "VehicleData",
+    "local_update_many", "EventQueue", "UploadEvent", "SimResult",
+    "evaluate", "run_simulation", "Scenario", "build_world", "get_scenario",
+    "list_scenarios", "run_scenario", "RSUServer", "RoundRecord",
     "combined_weight", "training_weight", "upload_weight",
     "weighted_local_model",
 ]

@@ -9,9 +9,17 @@ standard baselines included beyond the paper.
 All rules are pure pytree transforms; the fused elementwise pass is also
 available as a Pallas kernel (``repro.kernels.weighted_agg``) selected via
 ``use_kernel=True`` — the TPU-target implementation of the same math.
+
+The simulation hot path uses the jitted ``mix_update_donated`` /
+``literal_update_donated`` variants: the *local* model buffer is donated
+(argument 1) — it is produced by one local update and consumed by exactly
+one aggregation, so XLA may reuse its memory for the output.  The *global*
+model is never donated: pending upload events hold stale snapshots of it
+(DESIGN.md §2) that must stay alive until those events fire.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Sequence
 
 import jax
@@ -25,6 +33,30 @@ def _ema(global_params, contrib, beta: float):
         lambda g, c: (b * g.astype(jnp.float32) +
                       (1.0 - b) * c.astype(jnp.float32)).astype(g.dtype),
         global_params, contrib)
+
+
+@partial(jax.jit, donate_argnums=(1,))
+def mix_update_donated(global_params, local_params, alpha):
+    """w_r = (1-alpha) w_g + alpha w_l with the upload buffer donated.
+
+    ``alpha`` is a traced scalar so every round reuses one compiled program
+    (no retrace as the per-round weight changes)."""
+    a = jnp.asarray(alpha, jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda g, l: ((1.0 - a) * g.astype(jnp.float32) +
+                      a * l.astype(jnp.float32)).astype(g.dtype),
+        global_params, local_params)
+
+
+@partial(jax.jit, donate_argnums=(1,))
+def literal_update_donated(global_params, local_params, beta, weight):
+    """Eq. (10)+(11) exactly as printed, upload buffer donated."""
+    b = jnp.asarray(beta, jnp.float32)
+    w = jnp.asarray(weight, jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda g, l: (b * g.astype(jnp.float32) + (1.0 - b) * w *
+                      l.astype(jnp.float32)).astype(g.dtype),
+        global_params, local_params)
 
 
 def mafl_update(global_params, local_params, beta: float, weight: float,

@@ -8,12 +8,18 @@ vehicle's (train -> upload) cycle produces an upload-completion event at
 and the RSU consumes events in time order — exactly the paper's arrival
 semantics (Fig. 2), with each local-training burst itself a synchronous jit
 program.  See DESIGN.md §2 (hardware adaptation).
+
+The vehicle-batched engine (DESIGN.md §3) additionally stashes the result of
+a wave-trained local update on the event itself (``local_params`` /
+``local_loss``): an event's payload snapshot is frozen at schedule time, so
+its local training is independent of every other pending event and can be
+computed early without changing the time-ordered aggregation semantics.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Iterator, Optional
 
 
 @dataclass(order=True)
@@ -25,6 +31,11 @@ class UploadEvent:
     train_delay: float = field(compare=False, default=0.0)
     upload_delay: float = field(compare=False, default=0.0)
     payload: Any = field(compare=False, default=None)
+    # which train/upload cycle of this vehicle the event belongs to
+    cycle: int = field(compare=False, default=0)
+    # wave-precomputed local update (vehicle-batched engine only)
+    local_params: Any = field(compare=False, default=None, repr=False)
+    local_loss: Optional[float] = field(compare=False, default=None)
 
 
 class EventQueue:
@@ -40,6 +51,16 @@ class EventQueue:
 
     def pop(self) -> UploadEvent:
         return heapq.heappop(self._heap)
+
+    def peek(self) -> UploadEvent:
+        return self._heap[0]
+
+    def pending(self) -> Iterator[UploadEvent]:
+        """All queued events, unordered (the heap as-is)."""
+        return iter(self._heap)
+
+    def earliest_time(self) -> float:
+        return self._heap[0].time if self._heap else float("inf")
 
     def __len__(self):
         return len(self._heap)

@@ -49,6 +49,17 @@ def cross_pod_reconcile(params, mesh, pod_axis: str = "pod",
     return fn(params)
 
 
+def reconcile_models(models):
+    """Host-level analogue of :func:`cross_pod_reconcile` for the multi-RSU
+    scenario engine (``core.scenarios``): plain mean of N cohort models held
+    as separate pytrees (no mesh required) — the same consensus step the
+    shard_map path performs with one pmean per leaf."""
+    n = len(models)
+    return jax.tree_util.tree_map(
+        lambda *xs: (sum(x.astype(jnp.float32) for x in xs) / n).astype(
+            xs[0].dtype), *models)
+
+
 def make_hierarchical_round(mesh, beta: float, pod_axis: str = "pod",
                             reconcile_every: int = 4):
     """Returns ``round_fn(step, cohort_models, upload, weight)`` that applies

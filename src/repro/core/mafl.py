@@ -3,10 +3,26 @@
 Couples the channel/mobility simulator, the event-driven async scheduler, the
 vehicle clients, and the RSU aggregation into ``run_simulation``, which
 reproduces Figs. 3-5.
+
+Two engines share identical event semantics (DESIGN.md §2-§3):
+
+``engine="serial"``
+    One event at a time, exactly Algorithm 1's arrival order.  Each local
+    update is a single ``lax.scan`` dispatch.
+
+``engine="batched"`` (default)
+    Wave-based: every pending upload's payload snapshot is frozen at
+    schedule time, so all pending local updates are mutually independent
+    and train together — full ``wave_chunk``-sized slices under
+    ``jax.vmap`` of the same scan (one dispatch per chunk, one compiled
+    program for the whole run), remainders through the shared serial
+    program.  Aggregation still consumes events strictly in time order, so
+    the (round, vehicle, time) sequence is bit-identical to the serial
+    engine — verified by ``tests/test_engine_equivalence.py``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -14,11 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.channel import (ChannelParams, Mobility, RayleighAR1,
-                           shannon_rate, training_delay, upload_delay)
-from repro.core.client import Vehicle, VehicleData
+                           SlotGainCache, shannon_rate, training_delay,
+                           upload_delay)
+from repro.core.client import Vehicle, VehicleData, local_update_many
 from repro.core.events import EventQueue
 from repro.core.server import RSUServer
-from repro.models.cnn import accuracy, cnn_forward, cross_entropy_loss, init_cnn
+from repro.models.cnn import cnn_forward, init_cnn
 
 
 @dataclass
@@ -33,16 +50,44 @@ class SimResult:
         return self.acc_history[-1][1] if self.acc_history else float("nan")
 
 
+@jax.jit
+def _eval_step(params, images, labels, mask):
+    """Masked per-batch eval: (#correct, summed NLL) over mask==1 rows."""
+    logits = cnn_forward(params, images)
+    correct = jnp.sum((jnp.argmax(logits, -1) == labels).astype(
+        jnp.float32) * mask)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return correct, jnp.sum(nll * mask)
+
+
 def evaluate(params, images, labels, batch: int = 1000):
-    """Global-model metrics on the test set (Eqs. 1, 12)."""
-    accs, losses, n = [], [], len(labels)
+    """Global-model metrics on the test set (Eqs. 1, 12).
+
+    Every slice — including the ragged final one — is padded to exactly
+    ``batch`` rows with the padding masked out of both metrics, so all
+    rounds of all simulations share one compiled eval program instead of
+    retracing ``cnn_forward`` on the leftover shape.  ``batch`` is capped
+    at the test-set size — padding a small set up to a large slice would
+    waste forward compute on every call."""
+    images = np.asarray(images)
+    labels = np.asarray(labels)
+    n = len(labels)
+    batch = max(min(batch, n), 1)
+    correct = loss_sum = 0.0
     for s in range(0, n, batch):
-        img = jnp.asarray(images[s:s + batch])
-        lab = jnp.asarray(labels[s:s + batch])
-        logits = cnn_forward(params, img)
-        accs.append(float(accuracy(logits, lab)) * len(lab))
-        losses.append(float(cross_entropy_loss(logits, lab)) * len(lab))
-    return sum(accs) / n, sum(losses) / n
+        img, lab = images[s:s + batch], labels[s:s + batch]
+        m = len(lab)
+        if m < batch:
+            img = np.concatenate(
+                [img, np.zeros((batch - m,) + img.shape[1:], img.dtype)])
+            lab = np.concatenate([lab, np.zeros(batch - m, lab.dtype)])
+        mask = (np.arange(batch) < m).astype(np.float32)
+        c, l = _eval_step(params, jnp.asarray(img), jnp.asarray(lab),
+                          jnp.asarray(mask))
+        correct += float(c)
+        loss_sum += float(l)
+    return correct / n, loss_sum / n
 
 
 def run_simulation(
@@ -61,63 +106,57 @@ def run_simulation(
     init_params=None,
     interpretation: str = "mixing",
     progress: Optional[Callable[[int, float], None]] = None,
+    engine: str = "batched",
+    wave_chunk: int = 16,
+    batch_size: int = 128,
 ) -> SimResult:
-    """Run M rounds of the chosen aggregation scheme (Algorithm 1)."""
+    """Run M rounds of the chosen aggregation scheme (Algorithm 1).
+
+    Every vehicle uses the same minibatch size — ``min(batch_size, min_i
+    D_i)`` — so one world compiles exactly one local-training shape (the
+    per-vehicle *data volume* heterogeneity that Eq. 8 feeds on lives in
+    the delays, not the minibatch; DESIGN.md §6)."""
+    if engine not in ("batched", "serial", "unbatched"):
+        raise ValueError(f"unknown engine {engine!r}")
     p = params or ChannelParams()
     assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
     key = jax.random.PRNGKey(seed)
     global_params = init_params if init_params is not None else init_cnn(key)
 
-    mobility = Mobility(p)
-    fading = RayleighAR1(p, seed=seed)
     server = RSUServer(global_params, p, scheme=scheme, use_kernel=use_kernel,
                        interpretation=interpretation)
-    clients = [Vehicle(d, lr=lr, seed=seed) for d in vehicles_data]
-    queue = EventQueue()
+    fleet_batch = min(batch_size, min(d.size for d in vehicles_data))
+    clients = [Vehicle(d, lr=lr, batch_size=fleet_batch, seed=seed)
+               for d in vehicles_data]
 
-    # channel gains are sampled per discrete slot; cache per int(t)
-    gain_cache: dict[int, np.ndarray] = {}
-
-    def gains_at(t: float) -> np.ndarray:
-        slot = int(t)
-        while max(gain_cache, default=-1) < slot:
-            gain_cache[max(gain_cache, default=-1) + 1] = fading.step()
-        return gain_cache[slot]
+    timeline = _Timeline(p, seed)
+    queue = timeline.queue
+    if engine == "batched":
+        # The event timeline depends only on the channel/mobility/data-size
+        # processes, never on training results — so a cheap time-only dry
+        # run tells us *exactly* which (vehicle, cycle) uploads the M
+        # rounds consume, and the wave engine trains nothing else.
+        consumed = _consumed_events(p, seed, rounds)
 
     def schedule(vehicle: int, t_download: float):
-        """Vehicle downloads w_g at t_download, trains C_l, uploads C_u.
-
-        The *snapshot of the global model at download time* rides along in
-        the event payload — by upload time other vehicles have advanced the
-        global model, so this is what makes the uploads genuinely stale
-        (the dynamics the paper's weighting is designed around)."""
-        i1 = vehicle + 1                                    # 1-based index
-        c_l = training_delay(p, i1)
-        t_up = t_download + c_l
-        gain = gains_at(t_up)[vehicle]
-        dist = mobility.distance(vehicle, t_up)
-        rate = shannon_rate(p, gain, dist)
-        c_u = upload_delay(p, rate)
-        queue.push(t_up + c_u, vehicle, download_time=t_download,
-                   train_delay=c_l, upload_delay=c_u,
-                   payload=server.global_params)
+        timeline.schedule(vehicle, t_download, server.global_params)
 
     for k in range(p.K):
         schedule(k, 0.0)
 
     result = SimResult(scheme=scheme, rounds=[], acc_history=[],
                        loss_history=[])
-    while server.round < rounds and len(queue):
-        ev = queue.pop()
-        # local training from the model the vehicle downloaded (the stale
-        # snapshot in the payload); the compute runs now, but the ordering
-        # and the delays follow the event times (DESIGN.md §2).
-        local_params, _ = clients[ev.vehicle].local_update(
-            ev.payload, l_iters)
+
+    def consume(ev) -> None:
+        """One arrival: aggregate in time order, eval, re-download (Fig. 2).
+
+        ``ev.local_params`` must already hold the local update trained from
+        the stale payload snapshot."""
         rec = server.receive(
-            local_params, time=ev.time, vehicle=ev.vehicle,
+            ev.local_params, time=ev.time, vehicle=ev.vehicle,
             upload_delay=ev.upload_delay, train_delay=ev.train_delay,
             download_time=ev.download_time)
+        ev.local_params = ev.payload = None
         if server.round % eval_every == 0 or server.round == rounds:
             acc, loss = evaluate(server.global_params, test_images,
                                  test_labels)
@@ -128,7 +167,115 @@ def run_simulation(
                 progress(server.round, acc)
         # vehicle immediately downloads the fresh global model (Fig. 2)
         schedule(ev.vehicle, ev.time)
+        timeline.prune()
+
+    if engine in ("serial", "unbatched"):
+        while server.round < rounds and len(queue):
+            ev = queue.pop()
+            # local training from the model the vehicle downloaded (the
+            # stale snapshot in the payload); the compute runs now, but the
+            # ordering and delays follow the event times (DESIGN.md §2).
+            ev.local_params, _ = clients[ev.vehicle].local_update(
+                ev.payload, l_iters)
+            consume(ev)
+    else:
+        while server.round < rounds and len(queue):
+            # Wave: train every pending upload that the dry-run proved will
+            # be consumed and whose result is missing.  Payload snapshots
+            # are frozen at schedule time, so these trainings are mutually
+            # independent and zero of them are wasted.
+            untrained = sorted(
+                (ev for ev in queue.pending()
+                 if ev.local_params is None
+                 and (ev.vehicle, ev.cycle) in consumed),
+                key=lambda ev: (ev.time, ev.seq))
+            batches = [clients[ev.vehicle].sample_batches(l_iters)
+                       for ev in untrained]
+            outs, losses = local_update_many(
+                [ev.payload for ev in untrained], batches, lr,
+                chunk=wave_chunk)
+            for ev, out, lo in zip(untrained, outs, losses):
+                ev.local_params, ev.local_loss = out, lo
+            # Drain in time order until an event without a precomputed
+            # result (freshly re-scheduled) reaches the front — identical
+            # arrival semantics to the serial engine.  A front event that
+            # is outside the consumed set can only mean rounds are
+            # exhausted (the dry run replicates this pop sequence).
+            while (server.round < rounds and len(queue)
+                   and queue.peek().local_params is not None):
+                consume(queue.pop())
+            if (not untrained and server.round < rounds and len(queue)
+                    and queue.peek().local_params is None):
+                # the dry run said the front event is never consumed, yet
+                # rounds remain — the timelines have diverged; fail loudly
+                # rather than silently returning a truncated run
+                raise RuntimeError(
+                    "batched engine: dry-run consumed-set diverged from "
+                    f"live timeline at round {server.round} (front event "
+                    f"vehicle={queue.peek().vehicle} "
+                    f"cycle={queue.peek().cycle})")
 
     result.rounds = server.rounds
     result.final_params = server.global_params
     return result
+
+
+class _Timeline:
+    """The event timeline: channel gains, mobility, and the pending-upload
+    queue.  Times depend only on (params, seed) — never on training — so a
+    payload-free instance replays the identical schedule (DESIGN.md §3).
+
+    ``distance_fn(vehicle, t) -> meters`` defaults to the single-RSU
+    :class:`Mobility`; the multi-RSU scenario engine substitutes its
+    corridor geometry while keeping every other scheduling rule identical.
+
+    Channel gains are sampled per discrete slot and kept only for the live
+    event window (``SlotGainCache``): pops are globally time-ordered, so
+    slots below the earliest pending event can never be read again."""
+
+    def __init__(self, p: ChannelParams, seed: int, distance_fn=None):
+        self.p = p
+        self.distance = distance_fn or Mobility(p).distance
+        self.gains = SlotGainCache(RayleighAR1(p, seed=seed))
+        self.queue = EventQueue()
+        self._cycle = [0] * p.K
+
+    def schedule(self, vehicle: int, t_download: float, payload=None):
+        """Vehicle downloads w_g at t_download, trains C_l, uploads C_u.
+
+        The *snapshot of the global model at download time* rides along in
+        the event payload — by upload time other vehicles have advanced the
+        global model, so this is what makes the uploads genuinely stale
+        (the dynamics the paper's weighting is designed around)."""
+        p = self.p
+        i1 = vehicle + 1                                    # 1-based index
+        c_l = training_delay(p, i1)
+        t_up = t_download + c_l
+        gain = self.gains.at(t_up)[vehicle]
+        rate = shannon_rate(p, gain, self.distance(vehicle, t_up))
+        c_u = upload_delay(p, rate)
+        cyc = self._cycle[vehicle]
+        self._cycle[vehicle] += 1
+        return self.queue.push(t_up + c_u, vehicle,
+                               download_time=t_download, train_delay=c_l,
+                               upload_delay=c_u, payload=payload, cycle=cyc)
+
+    def prune(self):
+        if len(self.queue):
+            self.gains.prune_below(self.queue.earliest_time())
+
+
+def _consumed_events(p: ChannelParams, seed: int,
+                     rounds: int) -> set[tuple[int, int]]:
+    """Dry-run the timeline (no training, no payloads): the exact set of
+    (vehicle, cycle) uploads consumed within ``rounds`` arrivals."""
+    tl = _Timeline(p, seed)
+    for k in range(p.K):
+        tl.schedule(k, 0.0)
+    out: set[tuple[int, int]] = set()
+    while len(out) < rounds and len(tl.queue):
+        ev = tl.queue.pop()
+        out.add((ev.vehicle, ev.cycle))
+        tl.schedule(ev.vehicle, ev.time)
+        tl.prune()
+    return out

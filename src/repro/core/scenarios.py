@@ -1,0 +1,263 @@
+"""Scenario registry: named, parameterized simulation worlds (DESIGN.md §8).
+
+The paper evaluates one world — K=10 vehicles under a single RSU with
+Table-I heterogeneity.  The ROADMAP's north star needs fleets two orders of
+magnitude larger and qualitatively different regimes (non-IID shards,
+multi-RSU corridors with handover).  A ``Scenario`` bundles everything
+needed to build such a world — fleet size, data heterogeneity, channel
+overrides, RSU topology — so benchmarks, examples, and tests launch any of
+them from a name:
+
+    from repro.core.scenarios import run_scenario
+    result = run_scenario("fleet-k100", rounds=20)
+
+Multi-RSU scenarios (``n_rsus > 1``) run a corridor of RSUs, each with its
+own :class:`RSUServer` cohort model; a vehicle uploads to the RSU serving
+its position at arrival time (handover), and every ``reconcile_every``
+arrivals the cohort models are averaged (``hierarchical.reconcile_models``
+— the host-level version of the cross-pod pmean).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.channel import ChannelParams
+from repro.core.client import Vehicle
+from repro.core.hierarchical import reconcile_models
+from repro.core.mafl import SimResult, _Timeline, evaluate, run_simulation
+from repro.core.server import RSUServer
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """Everything needed to build and run one simulation world."""
+    name: str
+    description: str
+    K: int = 10
+    rounds: int = 40
+    l_iters: int = 5
+    lr: float = 0.03
+    scheme: str = "mafl"
+    # data world
+    n_train: int = 6000
+    n_test: int = 800
+    noise: float = 0.5
+    scale: float = 0.02
+    dirichlet_alpha: Optional[float] = None
+    max_per_vehicle: Optional[int] = None
+    # topology
+    n_rsus: int = 1
+    reconcile_every: int = 8
+    # dataclasses.replace(...) overrides applied to ChannelParams
+    channel_overrides: tuple = ()
+
+    def channel(self) -> ChannelParams:
+        return dataclasses.replace(ChannelParams(), K=self.K,
+                                   **dict(self.channel_overrides))
+
+
+_REGISTRY: dict[str, Scenario] = {}
+
+
+def register(sc: Scenario) -> Scenario:
+    if sc.name in _REGISTRY:
+        raise ValueError(f"duplicate scenario {sc.name!r}")
+    _REGISTRY[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown scenario {name!r}; known: {known}") from None
+
+
+def list_scenarios() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+register(Scenario(
+    name="paper-k10",
+    description="The paper's Section V-A world: K=10, Table-I "
+                "heterogeneity, IID shards (CPU-scaled).",
+))
+register(Scenario(
+    name="paper-k10-noniid",
+    description="Paper world with Dirichlet(0.5) class-skewed shards.",
+    dirichlet_alpha=0.5,
+))
+register(Scenario(
+    name="quick-k5",
+    description="Five-vehicle smoke world for tests and CI.",
+    K=5, rounds=10, l_iters=2, n_train=1200, n_test=240, scale=0.01,
+))
+register(Scenario(
+    name="fleet-k100",
+    description="Fleet-scale: 100 vehicles under one RSU; shard storage "
+                "capped so the wave engine batches ~uniform minibatches.",
+    K=100, rounds=120, scale=0.022, max_per_vehicle=512,
+    n_train=4000, n_test=800,
+))
+register(Scenario(
+    name="fleet-k100-noniid",
+    description="100-vehicle fleet with Dirichlet(0.3) heterogeneity.",
+    K=100, rounds=120, scale=0.022, max_per_vehicle=512,
+    n_train=4000, n_test=800, dirichlet_alpha=0.3,
+))
+register(Scenario(
+    name="highway-k40-handover",
+    description="Four-RSU corridor, 40 vehicles with handover and "
+                "periodic cross-RSU reconciliation.",
+    K=40, rounds=80, n_rsus=4, reconcile_every=8,
+    scale=0.02, max_per_vehicle=512, n_train=4000, n_test=800,
+))
+
+
+def build_world(sc: Scenario, seed: int = 0):
+    """Materialize (vehicles, test_images, test_labels, params) for ``sc``."""
+    # deferred: repro.data imports repro.core.client, so a module-level
+    # import here would make the repro.core package circular
+    from repro.data import partition_vehicles, synth_mnist
+    tr_i, tr_l, te_i, te_l = synth_mnist(n_train=sc.n_train,
+                                         n_test=sc.n_test, seed=0,
+                                         noise=sc.noise)
+    p = sc.channel()
+    veh = partition_vehicles(tr_i, tr_l, p, seed=seed, scale=sc.scale,
+                             dirichlet_alpha=sc.dirichlet_alpha,
+                             max_per_vehicle=sc.max_per_vehicle)
+    return veh, te_i, te_l, p
+
+
+def run_scenario(scenario: str | Scenario, *, seed: int = 0,
+                 engine: str = "batched", eval_every: int = 10,
+                 progress=None, **overrides) -> SimResult:
+    """Build the named world and run it; ``overrides`` replace Scenario
+    fields (e.g. ``rounds=20`` for a shortened run)."""
+    if engine not in ("batched", "serial", "unbatched"):
+        raise ValueError(f"unknown engine {engine!r}")
+    sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if overrides:
+        sc = dataclasses.replace(sc, **overrides)
+    veh, te_i, te_l, p = build_world(sc, seed=seed)
+    if sc.n_rsus > 1:
+        # the multi-RSU engine processes arrivals one at a time (no wave
+        # batching yet) regardless of the requested single-RSU engine
+        return run_handover_simulation(sc, veh, te_i, te_l, p, seed=seed,
+                                       eval_every=eval_every,
+                                       progress=progress)
+    return run_simulation(veh, te_i, te_l, scheme=sc.scheme,
+                          rounds=sc.rounds, l_iters=sc.l_iters, lr=sc.lr,
+                          params=p, seed=seed, eval_every=eval_every,
+                          engine=engine, progress=progress)
+
+
+class _Corridor:
+    """Vehicle kinematics along an ``n_rsus``-segment road.
+
+    RSU j sits at the center of segment j; a vehicle is served by the RSU
+    whose segment contains it (hard handover at segment edges), wrapping at
+    the corridor ends to keep the population constant (same re-entry
+    convention as the single-RSU :class:`~repro.channel.Mobility`)."""
+
+    def __init__(self, p: ChannelParams, n_rsus: int):
+        self.p = p
+        self.n_rsus = n_rsus
+        self.span = 2 * p.coverage * n_rsus
+        self.centers = np.array(
+            [-self.span / 2 + (j + 0.5) * 2 * p.coverage
+             for j in range(n_rsus)])
+        self.x0 = -self.span / 2 + self.span * (np.arange(p.K) / p.K)
+
+    def x(self, i: int, t: float) -> float:
+        dx = self.x0[i] + self.p.v * t
+        return ((dx + self.span / 2) % self.span) - self.span / 2
+
+    def serving_rsu(self, i: int, t: float) -> int:
+        x = self.x(i, t)
+        j = int((x + self.span / 2) // (2 * self.p.coverage))
+        return min(max(j, 0), self.n_rsus - 1)
+
+    def distance(self, i: int, t: float) -> float:
+        x = self.x(i, t)
+        j = self.serving_rsu(i, t)
+        return float(np.sqrt((x - self.centers[j]) ** 2 +
+                             self.p.d_y ** 2 + self.p.H ** 2))
+
+
+def run_handover_simulation(sc: Scenario, vehicles_data: Sequence,
+                            test_images, test_labels, p: ChannelParams,
+                            *, seed: int = 0, eval_every: int = 10,
+                            interpretation: str = "mixing",
+                            progress=None) -> SimResult:
+    """Multi-RSU MAFL with handover (beyond paper, DESIGN.md §8).
+
+    Each RSU keeps its own cohort model and applies the paper's per-arrival
+    aggregation; a vehicle downloads from the RSU serving it at download
+    time and uploads to the RSU serving it at arrival time.  Every
+    ``sc.reconcile_every`` arrivals all cohort models are averaged — the
+    corridor-scale version of the hierarchical cross-pod reconcile."""
+    import jax
+    from repro.models.cnn import init_cnn
+
+    init = init_cnn(jax.random.PRNGKey(seed))
+    servers = [RSUServer(init, p, scheme=sc.scheme,
+                         interpretation=interpretation)
+               for _ in range(sc.n_rsus)]
+    corridor = _Corridor(p, sc.n_rsus)
+    # same scheduling rules as the single-RSU engine — only the geometry
+    # (distance to the serving RSU) differs
+    timeline = _Timeline(p, seed, distance_fn=corridor.distance)
+    queue = timeline.queue
+    fleet_batch = min(128, min(d.size for d in vehicles_data))
+    clients = [Vehicle(d, lr=sc.lr, batch_size=fleet_batch, seed=seed)
+               for d in vehicles_data]
+
+    def schedule(vehicle: int, t_download: float):
+        rsu = corridor.serving_rsu(vehicle, t_download)
+        timeline.schedule(vehicle, t_download,
+                          payload=servers[rsu].global_params)
+
+    for k in range(p.K):
+        schedule(k, 0.0)
+
+    result = SimResult(scheme=f"{sc.scheme}+handover", rounds=[],
+                       acc_history=[], loss_history=[])
+    total = 0
+    while total < sc.rounds and len(queue):
+        ev = queue.pop()
+        local_params, _ = clients[ev.vehicle].local_update(ev.payload,
+                                                           sc.l_iters)
+        rsu = corridor.serving_rsu(ev.vehicle, ev.time)   # handover target
+        rec = servers[rsu].receive(
+            local_params, time=ev.time, vehicle=ev.vehicle,
+            upload_delay=ev.upload_delay, train_delay=ev.train_delay,
+            download_time=ev.download_time)
+        total += 1
+        consensus = None
+        if total % sc.reconcile_every == 0:
+            consensus = reconcile_models([s.global_params for s in servers])
+            for s in servers:
+                s.global_params = consensus
+        if total % eval_every == 0 or total == sc.rounds:
+            if consensus is None:
+                consensus = reconcile_models(
+                    [s.global_params for s in servers])
+            acc, loss = evaluate(consensus, test_images, test_labels)
+            rec.accuracy, rec.loss = acc, loss
+            result.acc_history.append((total, acc))
+            result.loss_history.append((total, loss))
+            if progress:
+                progress(total, acc)
+        result.rounds.append(rec)
+        schedule(ev.vehicle, ev.time)
+        timeline.prune()
+
+    result.final_params = reconcile_models(
+        [s.global_params for s in servers])
+    return result

@@ -1,5 +1,12 @@
-"""RSU-side state: the global model, round log, and aggregation dispatch."""
+"""RSU-side state: the global model, round log, and aggregation dispatch.
+
+The non-kernel update paths run through the jitted donated variants in
+``aggregation`` — the received upload buffer is consumed exactly once per
+round, so its memory is donated to the new global model (DESIGN.md §3).
+"""
 from __future__ import annotations
+
+import numpy as np
 
 from dataclasses import dataclass, field
 from typing import Any, Optional
@@ -48,18 +55,25 @@ class RSUServer:
         weight = 1.0
         if self.scheme == "mafl":
             weight = combined_weight(self.p, upload_delay, train_delay)
-            self.global_params = aggregation.mafl_update(
-                self.global_params, local_params, self.p.beta, weight,
-                use_kernel=self.use_kernel,
-                interpretation=self.interpretation)
+            if self.use_kernel:
+                self.global_params = aggregation.mafl_update(
+                    self.global_params, local_params, self.p.beta, weight,
+                    use_kernel=True, interpretation=self.interpretation)
+            elif self.interpretation == "literal":
+                self.global_params = aggregation.literal_update_donated(
+                    self.global_params, local_params, self.p.beta, weight)
+            else:
+                alpha = float(np.clip((1.0 - self.p.beta) * weight, 0.0, 1.0))
+                self.global_params = aggregation.mix_update_donated(
+                    self.global_params, local_params, alpha)
         elif self.scheme == "afl":
-            self.global_params = aggregation.afl_update(
-                self.global_params, local_params, self.p.beta)
+            self.global_params = aggregation.mix_update_donated(
+                self.global_params, local_params, 1.0 - self.p.beta)
         elif self.scheme == "fedasync":
             staleness = max(time - download_time, 0.0)
-            self.global_params = aggregation.fedasync_update(
-                self.global_params, local_params, self._fedasync_mix,
-                staleness)
+            alpha = self._fedasync_mix * (staleness + 1.0) ** (-0.5)
+            self.global_params = aggregation.mix_update_donated(
+                self.global_params, local_params, alpha)
         elif self.scheme == "fedbuff":
             self.global_params, _ = self._fedbuff.add(
                 self.global_params, local_params)

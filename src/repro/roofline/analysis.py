@@ -1,4 +1,4 @@
-"""Three-term roofline model for the dry-run artifacts (DESIGN.md §6).
+"""Three-term roofline model for the dry-run artifacts (EXPERIMENTS.md §Roofline).
 
     compute    = FLOPs_per_device / peak_flops
     memory     = HBM_bytes_per_device / hbm_bw

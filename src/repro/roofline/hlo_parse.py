@@ -150,10 +150,15 @@ def _dot_flops(op: Op, comp: Computation) -> float:
     _, out_dims = _shape_dims(op.type_str)
     if out_dims is None:
         return 0.0
-    m = re.match(r"\s*%([\w\.\-]+)", op.rest)
     lhs_dims = []
-    if m and m.group(1) in comp.shapes:
-        _, lhs_dims = _shape_dims(comp.shapes[m.group(1)])
+    # newer XLA prints operand types inline: dot(f32[128,256]{1,0} %lhs, …)
+    mt = re.match(r"\s*(\w+)\[([\d,]*)\]", op.rest)
+    if mt:
+        lhs_dims = [int(d) for d in mt.group(2).split(",") if d]
+    else:                    # older format: dot(%lhs, %rhs) — look up shape
+        m = re.match(r"\s*%([\w\.\-]+)", op.rest)
+        if m and m.group(1) in comp.shapes:
+            _, lhs_dims = _shape_dims(comp.shapes[m.group(1)])
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
     contract = 1
     if mc and lhs_dims:

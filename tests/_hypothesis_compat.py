@@ -1,0 +1,54 @@
+"""Optional-``hypothesis`` shim (tier-1 unbreak).
+
+The container image does not ship ``hypothesis`` (it is declared as an
+optional test dependency in ``pyproject.toml``).  Importing it at module
+scope made the whole suite fail at *collection*.  This shim re-exports the
+real library when present; otherwise it substitutes a deterministic
+fallback: each strategy contributes a small fixed set of representative
+samples (bounds + midpoint) and ``@given`` runs the test body over them —
+so the property tests keep running as deterministic example-based cases
+instead of being skipped.
+"""
+from __future__ import annotations
+
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                           # fallback
+    HAVE_HYPOTHESIS = False
+
+    class _Samples:
+        def __init__(self, values):
+            self.values = list(values)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            return _Samples(dict.fromkeys([min_value, mid, max_value]))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            mid = (min_value + max_value) / 2.0
+            return _Samples(dict.fromkeys([min_value, mid, max_value]))
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # no functools.wraps: copying __wrapped__ would make pytest
+            # read the original signature and demand fixtures for the
+            # drawn arguments
+            def wrapper():
+                n = max(len(s.values) for s in strats)
+                for i in range(n):
+                    drawn = [s.values[i % len(s.values)] for s in strats]
+                    fn(*drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -4,3 +4,17 @@ import sys
 # smoke tests and benches must see ONE device (the dry-run alone forces 512,
 # in its own process) — per the brief, never set the device-count flag here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Persistent XLA compilation cache: the suite is compile-dominated on a
+# 2-core CPU host, and every process re-paid every trace before this.
+# Warm re-runs of the tier-1 lane skip most compile time; cold runs are
+# unaffected except for writing the cache.
+try:
+    import jax
+
+    jax.config.update(
+        "jax_compilation_cache_dir",
+        os.path.join(os.path.dirname(__file__), "..", ".jax_cache"))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+except Exception:                                    # pragma: no cover
+    pass

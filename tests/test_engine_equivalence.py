@@ -1,0 +1,164 @@
+"""The tentpole invariant (DESIGN.md §3): the vehicle-batched wave engine
+must reproduce the serial engine's event semantics exactly — same
+(round, vehicle, time) sequence, same stale-snapshot payloads — with the
+parameters agreeing to float tolerance.
+
+The fast lane proves the *orchestration* equivalent with a stubbed trainer
+(compiles nothing); the slow lane re-proves it with the real CNN and the
+vmapped wave path engaged."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.client as client_mod
+from repro.channel import RayleighAR1, SlotGainCache
+from repro.channel.params import ChannelParams
+from repro.core import run_simulation
+from repro.core.mafl import _eval_step, evaluate
+from repro.data import partition_vehicles, synth_mnist
+
+
+@pytest.fixture(scope="module")
+def k5_world():
+    tr_i, tr_l, te_i, te_l = synth_mnist(n_train=1500, n_test=300, seed=0,
+                                         noise=0.35)
+    p = dataclasses.replace(ChannelParams(), K=5)
+    veh = partition_vehicles(tr_i, tr_l, p, seed=0, scale=0.03)
+    return veh, te_i, te_l, p
+
+
+def _run(world, engine, **kw):
+    veh, te_i, te_l, p = world
+    return run_simulation(veh, te_i, te_l, scheme="mafl", rounds=10,
+                          l_iters=2, lr=0.05, eval_every=5, seed=0,
+                          params=p, engine=engine, **kw)
+
+
+def _sequences(r):
+    return [(rec.round, rec.vehicle, rec.time, rec.weight)
+            for rec in r.rounds]
+
+
+def _fake_local_scan(params, images, labels, lr):
+    """Deterministic stand-in for the CNN scan: folds the exact minibatch
+    stream into the parameters so any divergence in payload snapshots or
+    RNG draw order between engines changes the result.  (Pure jnp so the
+    same function also works under vmap.)"""
+    h = (jnp.mean(images.astype(jnp.float32))
+         + jnp.mean(labels.astype(jnp.float32)))
+    out = jax.tree_util.tree_map(
+        lambda w: w * (1.0 - lr * 0.01) + 1e-3 * h, params)
+    return out, h
+
+
+def test_batched_matches_serial_with_stub_trainer(k5_world, monkeypatch):
+    monkeypatch.setattr(client_mod, "_local_scan_jit", _fake_local_scan)
+    monkeypatch.setattr(
+        client_mod, "_local_scan_vmap",
+        jax.vmap(_fake_local_scan, in_axes=(0, 0, 0, None)))
+    r_s = _run(k5_world, "serial")
+    r_b = _run(k5_world, "batched")
+    assert _sequences(r_s) == _sequences(r_b)
+    for x, y in zip(jax.tree_util.tree_leaves(r_s.final_params),
+                    jax.tree_util.tree_leaves(r_b.final_params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_batched_wave_chunking_matches_stub(k5_world, monkeypatch):
+    """Tiny wave_chunk engages the vmapped chunk path; results must not
+    depend on how waves are sliced."""
+    monkeypatch.setattr(client_mod, "_local_scan_jit", _fake_local_scan)
+    monkeypatch.setattr(
+        client_mod, "_local_scan_vmap",
+        jax.vmap(_fake_local_scan, in_axes=(0, 0, 0, None)))
+    r_loop = _run(k5_world, "batched", wave_chunk=1)   # pure scan loop
+    r_vmap = _run(k5_world, "batched", wave_chunk=2)   # vmapped pairs
+    assert _sequences(r_loop) == _sequences(r_vmap)
+    for x, y in zip(jax.tree_util.tree_leaves(r_loop.final_params),
+                    jax.tree_util.tree_leaves(r_vmap.final_params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+@pytest.mark.slow
+def test_batched_matches_serial_real_cnn(k5_world):
+    r_s = _run(k5_world, "serial")
+    r_b = _run(k5_world, "batched", wave_chunk=4)      # vmap path engaged
+    assert _sequences(r_s) == _sequences(r_b)          # bit-identical order
+    for x, y in zip(jax.tree_util.tree_leaves(r_s.final_params),
+                    jax.tree_util.tree_leaves(r_b.final_params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+    assert ([rd for rd, _ in r_s.acc_history]
+            == [rd for rd, _ in r_b.acc_history])
+    np.testing.assert_allclose([a for _, a in r_s.acc_history],
+                               [a for _, a in r_b.acc_history], atol=1e-5)
+
+
+def test_unknown_engine_rejected(k5_world):
+    with pytest.raises(ValueError):
+        _run(k5_world, "warp-drive")
+
+
+def test_fading_block_bit_identical_to_steps():
+    p = ChannelParams()
+    f1, f2 = RayleighAR1(p, seed=3), RayleighAR1(p, seed=3)
+    scalar = np.stack([f1.step() for _ in range(9)])
+    block = np.concatenate([f2.steps_block(5), f2.steps_block(4)])
+    np.testing.assert_array_equal(scalar, block)
+
+
+def test_evaluate_pads_ragged_batch_without_retrace():
+    """The ragged final slice must not trace a second program, and the
+    masked-pad metrics must equal the unpadded computation."""
+    from repro.models.cnn import accuracy, cnn_forward, cross_entropy_loss, \
+        init_cnn
+    _, _, te_i, te_l = synth_mnist(n_train=8, n_test=300, seed=0,
+                                   noise=0.35)
+    params = init_cnn(jax.random.PRNGKey(0))
+
+    n0 = _eval_step._cache_size()
+    acc, loss = evaluate(params, te_i, te_l, batch=128)   # 300 = 2*128 + 44
+    assert _eval_step._cache_size() == n0 + 1
+    evaluate(params, te_i[:200], te_l[:200], batch=128)   # different ragged n
+    assert _eval_step._cache_size() == n0 + 1             # still one program
+
+    logits = cnn_forward(params, jnp.asarray(te_i))
+    ref_acc = float(accuracy(logits, jnp.asarray(te_l)))
+    ref_loss = float(cross_entropy_loss(logits, jnp.asarray(te_l)))
+    assert acc == pytest.approx(ref_acc, abs=1e-6)
+    assert loss == pytest.approx(ref_loss, rel=1e-5)
+
+
+def test_gain_cache_prunes_to_live_window():
+    """The per-slot gain cache must hold only [earliest pending, last
+    generated] — the seed kept one vector per slot forever."""
+    p = ChannelParams()
+    gains = SlotGainCache(RayleighAR1(p, seed=0))
+    ref = RayleighAR1(p, seed=0)
+    expect = {s: g for s, g in enumerate(ref.steps_block(1000))}
+    np.testing.assert_array_equal(gains.at(999.7), expect[999])
+    assert len(gains) == 1000
+    gains.prune_below(990.0)
+    assert len(gains) == 10                      # slots 990..999 survive
+    np.testing.assert_array_equal(gains.at(995.2), expect[995])
+    # advancing after a prune continues the same AR(1) stream
+    ref2 = ref.steps_block(5)
+    np.testing.assert_array_equal(gains.at(1004.1), ref2[-1])
+    gains.prune_below(1004)
+    assert len(gains) == 1
+
+
+def test_long_horizon_run_stays_time_ordered(k5_world, monkeypatch):
+    monkeypatch.setattr(client_mod, "_local_scan_jit", _fake_local_scan)
+    monkeypatch.setattr(
+        client_mod, "_local_scan_vmap",
+        jax.vmap(_fake_local_scan, in_axes=(0, 0, 0, None)))
+    veh, te_i, te_l, p = k5_world
+    # heavy model + narrow band -> long uploads -> events span many slots
+    slow = dataclasses.replace(p, B=1e3, model_bits=5e6)
+    r = run_simulation(veh, te_i, te_l, scheme="afl", rounds=8, l_iters=1,
+                       lr=0.05, eval_every=8, seed=0, params=slow)
+    times = [rec.time for rec in r.rounds]
+    assert times == sorted(times) and times[-1] > 100

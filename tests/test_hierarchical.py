@@ -8,8 +8,16 @@ import textwrap
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core.hierarchical import pod_local_mafl
+from repro.core.hierarchical import pod_local_mafl, reconcile_models
+
+
+def test_reconcile_models_is_mean_of_cohorts():
+    models = [{"w": jnp.full((3,), float(v))} for v in (1.0, 2.0, 6.0)]
+    out = reconcile_models(models)
+    np.testing.assert_allclose(np.asarray(out["w"]), 3.0, rtol=1e-6)
+    assert out["w"].dtype == models[0]["w"].dtype
 
 
 def test_pod_local_update_matches_mixing_rule():
@@ -21,6 +29,7 @@ def test_pod_local_update_matches_mixing_rule():
                                rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_cross_pod_reconcile_on_multidevice_mesh():
     code = textwrap.dedent("""
         import os

@@ -1,10 +1,13 @@
 """Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode),
-plus hypothesis property tests — deliverable (c)."""
+plus hypothesis property tests — deliverable (c).  When ``hypothesis`` is
+absent the property tests fall back to deterministic example sweeps via
+``_hypothesis_compat`` instead of breaking collection."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.cross_entropy import ops as ce_ops, ref as ce_ref
 from repro.kernels.decode_attention import ops as dec_ops, ref as dec_ref
@@ -85,6 +88,7 @@ def test_cross_entropy_property(R, V):
 # ---------------------------------------------------------------------------
 # swa_attention
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("B,S,H,Kv,hd,W,bq,bk", [
     (1, 128, 2, 2, 32, 32, 32, 32),
     (2, 256, 4, 2, 64, 64, 64, 64),
@@ -102,6 +106,7 @@ def test_swa_attention_vs_ref(B, S, H, Kv, hd, W, bq, bk):
     np.testing.assert_allclose(out_k, out_r, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_swa_kernel_bf16():
     q = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 2, 32),
                           jnp.bfloat16)
@@ -118,6 +123,7 @@ def test_swa_kernel_bf16():
 # ---------------------------------------------------------------------------
 # decode_attention (one token vs KV cache — the decode-shape hot-spot)
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("B,S,H,Kv,hd,bs,pos", [
     (2, 256, 4, 2, 32, 64, 200),
     (1, 512, 8, 8, 64, 128, 511),
@@ -133,6 +139,7 @@ def test_decode_attention_vs_ref(B, S, H, Kv, hd, bs, pos):
     np.testing.assert_allclose(out_k, out_r, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_decode_attention_matches_model_decode_path():
     """Kernel == the model's jnp full-attention decode (same math)."""
     from repro.configs import get_config
@@ -156,6 +163,7 @@ def test_decode_attention_matches_model_decode_path():
     np.testing.assert_allclose(y_model, y_kernel, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_swa_kernel_agrees_with_model_swa_path():
     """Kernel == the model's jnp SWA attention (same math, two impls)."""
     from repro.configs import get_config

@@ -33,6 +33,7 @@ def test_rope_preserves_norm_and_relativity():
     assert dot_at(5, 3) == pytest.approx(dot_at(7, 5), rel=1e-4)
 
 
+@pytest.mark.slow
 def test_blocked_sdpa_matches_dense():
     """The q-blocked flash-style path must equal the dense path."""
     cfg = get_config("smollm-360m").reduced()
@@ -64,6 +65,7 @@ def test_swa_masks_out_of_window():
     assert not np.allclose(y1[:, 0], y2[:, 0])
 
 
+@pytest.mark.slow
 def test_mla_absorbed_decode_matches_naive():
     cfg = get_config("deepseek-v2-lite-16b").reduced()
     key = jax.random.PRNGKey(0)
@@ -77,6 +79,7 @@ def test_mla_absorbed_decode_matches_naive():
     np.testing.assert_allclose(c1["c_kv"], c2["c_kv"], atol=1e-6)
 
 
+@pytest.mark.slow
 def test_chunk_attention_blocks_cross_chunk():
     cfg = get_config("llama4-scout-17b-a16e").reduced().variant(attn_chunk=4)
     key = jax.random.PRNGKey(0)
@@ -102,6 +105,7 @@ def test_moe_router_mass_conservation():
     assert float(aux) >= 0
 
 
+@pytest.mark.slow
 def test_moe_dispatch_equals_dense_at_high_capacity():
     """With no drops, sort-dispatch == dense masked combine."""
     cfg = get_config("deepseek-v2-lite-16b").reduced().variant(
@@ -115,6 +119,7 @@ def test_moe_dispatch_equals_dense_at_high_capacity():
     np.testing.assert_allclose(y_dispatch, y_dense, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_tokens():
     cfg = get_config("deepseek-v2-lite-16b").reduced().variant(
         capacity_factor=0.1, n_shared_experts=0)
@@ -141,6 +146,7 @@ def test_chunked_scan_equals_plain_scan():
     np.testing.assert_allclose(y1, y2, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_mamba_fwd_decode_parity():
     cfg = get_config("jamba-v0.1-52b").reduced()
     p = mamba_mod.init_mamba(cfg, jax.random.PRNGKey(0), jnp.float32)
@@ -156,6 +162,7 @@ def test_mamba_fwd_decode_parity():
     np.testing.assert_allclose(cache_full["ssm"], cache["ssm"], atol=1e-4)
 
 
+@pytest.mark.slow
 def test_rwkv_fwd_decode_parity():
     cfg = get_config("rwkv6-1.6b").reduced()
     p = rwkv_mod.init_time_mix(cfg, jax.random.PRNGKey(0), jnp.float32)
@@ -183,6 +190,7 @@ def test_rwkv_decay_in_unit_interval():
 # ---------------------------------------------------------------------------
 # assembly
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-1.6b",
                                   "jamba-v0.1-52b", "deepseek-v2-lite-16b"])
 def test_prefill_decode_match_forward(arch):

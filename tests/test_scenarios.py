@@ -1,0 +1,87 @@
+"""Scenario registry (DESIGN.md §8): named worlds, fleet-scale builds, and
+the multi-RSU handover engine."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.scenarios import (Scenario, _Corridor, build_world,
+                                  get_scenario, list_scenarios, register,
+                                  run_scenario)
+
+
+def test_registry_contents():
+    names = list_scenarios()
+    assert "paper-k10" in names and "fleet-k100" in names
+    assert "highway-k40-handover" in names
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+    with pytest.raises(ValueError, match="duplicate"):
+        register(get_scenario("paper-k10"))
+
+
+def test_paper_world_matches_table_one():
+    sc = get_scenario("paper-k10")
+    veh, te_i, te_l, p = build_world(sc)
+    assert p.K == 10 and len(veh) == 10
+    # Table-I heterogeneity preserved proportionally: D_i increasing in i
+    sizes = [v.size for v in veh]
+    assert sizes == sorted(sizes) and sizes[0] < sizes[-1]
+
+
+def test_fleet_k100_world_builds_with_capped_shards():
+    sc = get_scenario("fleet-k100")
+    veh, te_i, te_l, p = build_world(sc)
+    assert p.K == 100 and len(veh) == 100
+    assert max(v.size for v in veh) <= 512
+    # delays still use the uncapped Table-I D_i: strictly increasing in i
+    from repro.channel import training_delay
+    delays = [training_delay(p, i) for i in range(1, 101)]
+    assert all(a < b for a, b in zip(delays, delays[1:]))
+
+
+def test_quick_scenario_runs_batched():
+    r = run_scenario("quick-k5", rounds=4, eval_every=2)
+    assert len(r.rounds) == 4
+    assert all(np.isfinite(a) for _, a in r.acc_history)
+    times = [rec.time for rec in r.rounds]
+    assert times == sorted(times)
+
+
+def test_scenario_overrides_replace_fields():
+    sc = get_scenario("fleet-k100")
+    r = dataclasses.replace(sc, rounds=7)
+    assert r.rounds == 7 and r.K == sc.K
+
+
+def test_corridor_handover_geometry():
+    from repro.channel.params import ChannelParams
+    p = dataclasses.replace(ChannelParams(), K=4)
+    c = _Corridor(p, n_rsus=4)
+    # 4 segments of width 2*coverage: a vehicle in segment j is served by j
+    for j in range(4):
+        x_center_time = (c.centers[j] - c.x0[0]) / p.v
+        assert c.serving_rsu(0, x_center_time) == j
+    # distance at a segment center is the overhead distance
+    t0 = (c.centers[2] - c.x0[0]) / p.v
+    assert c.distance(0, t0) == pytest.approx(
+        np.sqrt(p.d_y ** 2 + p.H ** 2))
+    # wrap-around re-entry keeps x inside the corridor
+    assert abs(c.x(0, 1e6)) <= c.span / 2
+
+
+@pytest.mark.slow
+def test_handover_scenario_runs():
+    r = run_scenario("highway-k40-handover", rounds=16, eval_every=8)
+    assert len(r.rounds) == 16
+    assert r.scheme == "mafl+handover"
+    assert all(np.isfinite(a) for _, a in r.acc_history)
+
+
+@pytest.mark.slow
+def test_fleet_k100_scenario_completes():
+    r = run_scenario("fleet-k100", rounds=30, eval_every=15, l_iters=2)
+    assert len(r.rounds) == 30
+    assert all(np.isfinite(a) for _, a in r.acc_history)
+    # fleet diversity: multiple distinct vehicles contribute
+    assert len({rec.vehicle for rec in r.rounds}) > 5

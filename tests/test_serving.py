@@ -27,6 +27,7 @@ def test_server_drains_requests(served):
     assert srv.pending() == 0 and srv.active() == 0
 
 
+@pytest.mark.slow
 def test_server_matches_unbatched_decode(served):
     """Slot-pooled decode must equal a dedicated single-sequence decode."""
     cfg, params = served

@@ -20,6 +20,7 @@ def small_world():
     return veh, te_i, te_l, p
 
 
+@pytest.mark.slow
 def test_cnn_learns_standalone():
     tr_i, tr_l, te_i, te_l = synth_mnist(n_train=800, n_test=200, seed=1,
                                          noise=0.3)
@@ -34,7 +35,10 @@ def test_cnn_learns_standalone():
     assert acc > 0.55
 
 
-@pytest.mark.parametrize("scheme", ["mafl", "afl", "fedasync", "fedbuff"])
+@pytest.mark.parametrize("scheme", [
+    "mafl", "afl",
+    pytest.param("fedasync", marks=pytest.mark.slow),
+    pytest.param("fedbuff", marks=pytest.mark.slow)])
 def test_simulation_runs_all_schemes(small_world, scheme):
     veh, te_i, te_l, p = small_world
     r = run_simulation(veh, te_i, te_l, scheme=scheme, rounds=6, l_iters=2,
@@ -59,6 +63,7 @@ def test_mafl_round_records_have_paper_weights(small_world):
     assert counts[0] >= counts[-1]
 
 
+@pytest.mark.slow
 def test_mafl_improves_over_init(small_world):
     veh, te_i, te_l, p = small_world
     r = run_simulation(veh, te_i, te_l, scheme="mafl", rounds=20,
@@ -90,6 +95,7 @@ def test_kernel_aggregation_path_in_simulation(small_world):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_transformer_fl_driver_one_round():
     from repro.launch.train import main
     params = main(["--arch", "smollm-360m", "--reduced", "--rounds", "2",

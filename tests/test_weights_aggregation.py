@@ -1,10 +1,12 @@
 """The paper's core math: delay weights (Eqs. 7, 9, 10) and aggregation
-(Eq. 11) + baselines, including hypothesis property tests."""
+(Eq. 11) + baselines, including hypothesis property tests (deterministic
+example sweeps via ``_hypothesis_compat`` when hypothesis is absent)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.channel.params import ChannelParams
 from repro.core import (FedBuffAggregator, afl_update, fedasync_update,
