@@ -1,0 +1,113 @@
+"""Mega-fleet engine benchmark (ISSUE 2 acceptance artifact).
+
+Measures per-round wall-clock of the device-resident ``engine="jit"`` on a
+mega-fleet scenario and compares it against the host wave-batched engine
+two ways, writing everything to ``benchmarks/results/BENCH_fleet.json``:
+
+- **extrapolated**: the batched engine measured at its PR-1 operating
+  point (``fleet-k100``: 128-image minibatches, 5 local iterations — the
+  world the 37 s / 30-round headline came from) and extrapolated to
+  K=1000 with the *conservative flat model* (per-round cost treated as
+  K-independent; any K-linear term in scheduling/stacking only raises it).
+- **direct**: the batched engine run outright on the identical K=1000
+  world — same shards, same single local step — so the number is an
+  honest same-work comparison, not only an extrapolation.
+
+``python -m benchmarks.run fleet [scenario] [rounds]``; QUICK=1 swaps in
+``quick-k5`` and runs all three engines directly (the CI smoke artifact).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import save_result
+from repro.core.mafl import run_simulation
+from repro.core.scenarios import build_world, get_scenario
+
+
+def _timed(veh, te_i, te_l, p, sc, engine, rounds, seed=0):
+    t0 = time.perf_counter()
+    r = run_simulation(veh, te_i, te_l, scheme=sc.scheme, rounds=rounds,
+                       l_iters=sc.l_iters, lr=sc.lr, params=p, seed=seed,
+                       eval_every=rounds, engine=engine)
+    return time.perf_counter() - t0, r
+
+
+def _bench_engine(world, sc, engine, rounds):
+    veh, te_i, te_l, p = world
+    cold, r = _timed(veh, te_i, te_l, p, sc, engine, rounds)
+    warm, r = _timed(veh, te_i, te_l, p, sc, engine, rounds)
+    return {
+        "cold_s": round(cold, 3),
+        "warm_s": round(warm, 3),
+        "cold_ms_per_round": round(cold * 1e3 / rounds, 2),
+        "warm_ms_per_round": round(warm * 1e3 / rounds, 2),
+        "final_accuracy": float(r.final_accuracy()),
+    }, r
+
+
+def run(scenario: str = "fleet-k1000", rounds: int | None = None,
+        quick: bool = False) -> dict:
+    if quick:
+        scenario, rounds = "quick-k5", rounds or 8
+    sc = get_scenario(scenario)
+    rounds = rounds or sc.rounds
+    print(f"building {scenario} (K={sc.K}) ...")
+    world = build_world(sc, seed=0)
+
+    payload = {"scenario": scenario, "K": sc.K, "rounds": rounds,
+               "l_iters": sc.l_iters, "engines": {}}
+
+    engines = ("serial", "batched", "jit") if quick else ("batched", "jit")
+    for engine in engines:
+        stats, _ = _bench_engine(world, sc, engine, rounds)
+        payload["engines"][engine] = stats
+        print(f"  {engine:8s}: cold {stats['cold_s']:7.1f}s  warm "
+              f"{stats['warm_s']:7.1f}s  ({stats['warm_ms_per_round']:.1f} "
+              f"ms/round warm)")
+
+    # accuracy/loss trajectory from a separate (untimed) jit run so the
+    # timed runs above stay eval-free except for the final round
+    veh, te_i, te_l, p = world
+    traj = run_simulation(veh, te_i, te_l, scheme=sc.scheme, rounds=rounds,
+                          l_iters=sc.l_iters, lr=sc.lr, params=p, seed=0,
+                          eval_every=max(1, rounds // 10), engine="jit")
+    payload["trajectory"] = {
+        "rounds": [rd for rd, _ in traj.acc_history],
+        "accuracy": [float(a) for _, a in traj.acc_history],
+        "loss": [float(l) for _, l in traj.loss_history],
+    }
+
+    jit_ms = payload["engines"]["jit"]["warm_ms_per_round"]
+    direct_ms = payload["engines"]["batched"]["warm_ms_per_round"]
+    payload["ratio_direct_same_world"] = round(direct_ms / jit_ms, 2)
+
+    if not quick:
+        # extrapolation basis: the batched engine at its fleet-k100
+        # operating point (PR-1 headline world), flat-in-K model
+        basis = get_scenario("fleet-k100")
+        b_rounds = min(rounds, 30)
+        print(f"measuring extrapolation basis fleet-k100 ({b_rounds} "
+              "rounds) ...")
+        bworld = build_world(basis, seed=0)
+        bstats, _ = _bench_engine(bworld, basis, "batched", b_rounds)
+        extrap = bstats["warm_ms_per_round"]
+        payload["batched_extrapolated_at_K"] = {
+            "basis_scenario": "fleet-k100",
+            "basis_rounds": b_rounds,
+            "basis_warm_ms_per_round": extrap,
+            "model": "flat-in-K (conservative: ignores K-linear "
+                     "scheduling/stacking terms)",
+            "extrapolated_ms_per_round_at_target_K": extrap,
+        }
+        payload["ratio_vs_extrapolated"] = round(extrap / jit_ms, 2)
+        print(f"  jit {jit_ms:.1f} ms/round vs batched extrapolated "
+              f"{extrap:.1f} ms/round -> {payload['ratio_vs_extrapolated']}x"
+              f" (direct same-world: {payload['ratio_direct_same_world']}x)")
+
+    # quick (CI smoke) runs get their own file so they never clobber the
+    # committed mega-fleet acceptance artifact
+    path = save_result("BENCH_fleet_quick" if quick else "BENCH_fleet",
+                       payload)
+    print(f"wrote {path}")
+    return payload

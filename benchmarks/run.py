@@ -6,6 +6,10 @@
   roofline   — render the dry-run roofline tables (deliverable g)
   scenario   — run a named scenario from the registry (DESIGN.md §8):
                ``python -m benchmarks.run scenario fleet-k100 [rounds]``
+  fleet      — mega-fleet engine comparison -> BENCH_fleet.json
+               (DESIGN.md §9): ``python -m benchmarks.run fleet
+               [scenario] [rounds]``; QUICK=1 smokes quick-k5 through
+               serial/batched/jit
 
 ``python -m benchmarks.run``            runs everything (QUICK=1 shrinks the
 simulation rounds for CI-speed smoke runs).
@@ -48,6 +52,17 @@ def main() -> None:
         run_scenario_cmd(sys.argv[2:])
         return
 
+    if which == "fleet":
+        from benchmarks import fleet_bench
+        argv = sys.argv[2:]
+        kw = {}
+        if argv:
+            kw["scenario"] = argv[0]
+        if len(argv) > 1:
+            kw["rounds"] = int(argv[1])
+        fleet_bench.run(quick=quick, **kw)
+        return
+
     if which in ("all", "kernels"):
         print("== kernel microbenchmarks ==")
         from benchmarks import kernel_micro
@@ -72,6 +87,11 @@ def main() -> None:
         print("\n== Beyond-paper: scheme ablation ==")
         from benchmarks import ablation_schemes
         ablation_schemes.run(quick=quick)
+
+    if which == "all":
+        print("\n== Mega-fleet engine comparison ==")
+        from benchmarks import fleet_bench
+        fleet_bench.run(quick=quick)
 
     print(f"\ntotal {time.time() - t0:.0f}s")
 

@@ -51,6 +51,41 @@ class RayleighAR1:
         return float(np.abs(self.g[i]) ** 2)
 
 
+def slot_gain_table(params: ChannelParams, seed: int,
+                    n_slots: int) -> np.ndarray:
+    """Gains for slots ``0..n_slots-1`` as one ``[n_slots, K]`` table.
+
+    The device-resident engine (DESIGN.md §9) replaces the incremental
+    host-side :class:`SlotGainCache` with this precomputed table: the AR(1)
+    recursion ``g_t = rho g_{t-1} + s i_t`` is a linear recurrence, so the
+    whole table is produced by a *vectorized prefix scan* (log2(n) doubling
+    passes of whole-array ops) instead of a per-slot Python loop.  The
+    innovations are drawn in a single RNG call with exactly the bitstream
+    layout of :meth:`RayleighAR1.steps_block`, so the table agrees with the
+    sequential cache to f64 round-off (the summation order differs, not the
+    random numbers) — pinned by ``tests/test_engine_conformance.py``."""
+    K = params.K
+    if n_slots <= 0:
+        return np.empty((0, K))
+    rng = np.random.default_rng(seed)
+    g0 = (rng.normal(size=K) + 1j * rng.normal(size=K)) / np.sqrt(2)
+    innov = rng.normal(size=(n_slots, 2, K))
+    innov = (innov[:, 0] + 1j * innov[:, 1]) / np.sqrt(2)
+    rho = params.fading_rho
+    # per-slot affine map g -> A g + B; compose prefixes by doubling
+    A = np.full(n_slots, rho)
+    B = np.sqrt(1 - rho ** 2) * innov
+    shift = 1
+    while shift < n_slots:
+        A_prev = np.concatenate([np.ones(shift), A[:-shift]])
+        B_prev = np.vstack([np.zeros((shift, K), B.dtype), B[:-shift]])
+        B = A[:, None] * B_prev + B
+        A = A * A_prev
+        shift *= 2
+    g = A[:, None] * g0[None, :] + B
+    return np.abs(g) ** 2
+
+
 class SlotGainCache:
     """Windowed per-slot gain cache over a :class:`RayleighAR1` process.
 
@@ -80,6 +115,14 @@ class SlotGainCache:
         keep = int(t)
         for s in [s for s in self._cache if s < keep]:
             del self._cache[s]
+
+    @property
+    def last_slot(self) -> int:
+        """Highest slot the AR(1) chain has been advanced to (-1 if none).
+
+        The jit-engine planner reads this after its dry run to size the
+        precomputed :func:`slot_gain_table` (DESIGN.md §9)."""
+        return self._last_slot
 
     def __len__(self) -> int:
         return len(self._cache)

@@ -26,11 +26,23 @@ class ChannelParams:
     gamma: float = 0.9             # uploading-delay decay base (Eq. 7)
     fading_rho: float = 0.95       # AR(1) coherence of the Rayleigh channel
     coverage: float = 400.0        # RSU coverage half-width, m (re-entry wrap)
+    # platoon size (0/1 = Table-I heterogeneity per vehicle).  With
+    # ``platoon = n``, vehicles travel in convoys of n that share the
+    # platoon leader's compute and data volume, so every member's training
+    # delay is identical and their uploads arrive in near-simultaneous
+    # bursts — the bursty-arrival stress regime of the
+    # ``platoon-burst-k500`` scenario (DESIGN.md §9).
+    platoon: int = 0
+
+    def _platoon_leader(self, i: int) -> int:
+        if self.platoon > 1:
+            return ((i - 1) // self.platoon) * self.platoon + 1
+        return i
 
     def delta(self, i: int) -> float:
         """CPU frequency of vehicle i (1-based), cycles/s."""
-        return 1.5 * (i + 5) * 1e8
+        return 1.5 * (self._platoon_leader(i) + 5) * 1e8
 
     def data_count(self, i: int) -> int:
         """D_i: images carried by vehicle i (1-based)."""
-        return 2250 + 3750 * i
+        return 2250 + 3750 * self._platoon_leader(i)

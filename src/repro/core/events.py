@@ -62,5 +62,26 @@ class EventQueue:
     def earliest_time(self) -> float:
         return self._heap[0].time if self._heap else float("inf")
 
+    def as_struct_arrays(self) -> dict:
+        """Pending events as structure-of-arrays, sorted by (time, seq).
+
+        The columnar face of the queue: the device-resident engine
+        (DESIGN.md §9) seeds its fixed-capacity slot arrays from this —
+        payloads are deliberately excluded (the jit engine keeps snapshots
+        in its own device-side ring)."""
+        import numpy as np
+        evs = sorted(self._heap, key=lambda e: (e.time, e.seq))
+        return {
+            "time": np.array([e.time for e in evs], np.float64),
+            "vehicle": np.array([e.vehicle for e in evs], np.int32),
+            "download_time": np.array([e.download_time for e in evs],
+                                      np.float64),
+            "train_delay": np.array([e.train_delay for e in evs],
+                                    np.float64),
+            "upload_delay": np.array([e.upload_delay for e in evs],
+                                     np.float64),
+            "cycle": np.array([e.cycle for e in evs], np.int32),
+        }
+
     def __len__(self):
         return len(self._heap)

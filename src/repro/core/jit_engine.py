@@ -1,0 +1,441 @@
+"""Device-resident mega-fleet engine: the whole round loop as one compiled
+program (``engine="jit"``, DESIGN.md §9).
+
+The serial and batched engines (DESIGN.md §2-§3) pay one Python dispatch per
+arrival — heap pop, aggregation call, re-schedule — so wall-clock grows with
+fleet size even though the training itself is batched.  This engine moves
+the *event loop itself* into XLA:
+
+- **Fixed-capacity slot queue.**  Every vehicle has exactly one in-flight
+  upload at all times (it re-downloads the instant its upload is consumed,
+  Fig. 2), so the event queue is exactly ``K`` structured slots: ``f32[K]``
+  times/delays and ``i32[K]`` cycles, indexed by vehicle.  A pop is an
+  ``argmin`` over the time column; a re-schedule is a one-slot scatter.
+
+- **Precomputed slot gains.**  The host-side incremental ``SlotGainCache``
+  is replaced by :func:`repro.channel.slot_gain_table` — the AR(1) linear
+  recurrence evaluated for all slots at once by a vectorized prefix scan —
+  loaded as an ``f32[S, K]`` table the in-program re-scheduler indexes.
+
+- **Snapshot ring.**  Stale download-time payloads (DESIGN.md §2 invariant
+  1) live in a ring of the last ``M+1`` global models indexed by *round*:
+  the payload of an event downloaded after round ``d`` is ``ring[d+1]``
+  (``ring[0]`` = the initial model).  Capacity ``M+1`` is exact — an event
+  consumed within ``M`` rounds can only have downloaded at one of rounds
+  ``0..M-1`` — and for mega-fleets it is far smaller than a per-vehicle
+  payload buffer (``M+1`` vs ``K`` models when ``K >> M``).
+
+- **Wave-hoisted training.**  Local training is grouped into the same
+  waves the batched engine discovers (every pending upload whose payload
+  round has completed trains together) and runs as top-level ``jax.vmap``
+  blocks *between* the event-loop scan segments, optionally sharded over
+  the ``"data"`` axis of a `launch/mesh.py` mesh via ``shard_map``.  Waves
+  whose members all share one payload (every initial-download wave — the
+  overwhelmingly common case when ``K >> M``) broadcast the parameters
+  instead of stacking them, so the convolutions keep unbatched filters —
+  on CPU a stacked-parameter vmap lowers to grouped convolutions that run
+  *slower* than serial dispatch, and on TPU the broadcast form feeds the
+  MXU one large batch.  The event-loop scan between waves touches only
+  argmin/scalar/elementwise-aggregation ops, which lose nothing inside a
+  compiled loop body.
+
+Times inside the program are ``f32`` (the event semantics are unchanged;
+conformance vs the f64 host engines is to tolerance — pinned exactly on the
+(round, vehicle) sequence by ``tests/test_engine_conformance.py``).  The
+timeline never depends on training (DESIGN.md §3), so a cheap f64 host dry
+run plans the program (pop order, wave partition, gain-table size, one
+minibatch stack per round) and afterwards cross-checks the device trace —
+any divergence raises instead of silently mis-pairing batches to rounds.
+
+Not handled here (falls back to the host engines): multi-RSU handover
+corridors (``run_handover_simulation``) and the buffered ``fedbuff``
+scheme, both of which carry host-side state between arrivals.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel import ChannelParams, Mobility, slot_gain_table
+from repro.core import client as client_mod
+from repro.core.client import Vehicle, VehicleData
+from repro.core.server import RoundRecord
+from repro.models.cnn import init_cnn
+
+_SUPPORTED_SCHEMES = ("mafl", "afl", "fedasync")
+
+
+@dataclass
+class FleetPlan:
+    """Host dry-run of the timeline: everything the compiled program needs
+    that training cannot change (DESIGN.md §3: times depend only on the
+    channel/mobility/data-size processes)."""
+    veh: np.ndarray             # i32[M] vehicle popped at round r
+    cycle: np.ndarray           # i32[M] that vehicle's upload cycle
+    dl_round: np.ndarray        # i32[M] round after which it downloaded (-1 = initial)
+    times: np.ndarray           # f64[M] host-reference pop times
+    train_delay: np.ndarray     # f64[M]
+    upload_delay: np.ndarray    # f64[M]
+    download_time: np.ndarray   # f64[M]
+    waves: tuple                # ((train_rounds, seg_start, seg_end), ...)
+    n_slots: int                # gain-table height
+    q0: dict                    # initial per-vehicle slot arrays
+
+
+def plan_fleet(p: ChannelParams, seed: int, rounds: int) -> FleetPlan:
+    """Dry-run ``rounds`` arrivals (no payloads, no training) and derive the
+    pop order, the wave partition, and the initial queue slots."""
+    from repro.core.mafl import _Timeline
+
+    tl = _Timeline(p, seed)
+    for k in range(p.K):
+        tl.schedule(k, 0.0)
+
+    ev0 = tl.queue.as_struct_arrays()
+    assert len(np.unique(ev0["vehicle"])) == p.K, \
+        "slot queue invariant: one in-flight upload per vehicle"
+    order = np.argsort(ev0["vehicle"])
+    q0 = {k: v[order] for k, v in ev0.items()}
+
+    M = rounds
+    veh = np.empty(M, np.int32)
+    cyc = np.empty(M, np.int32)
+    dlr = np.empty(M, np.int32)
+    times = np.empty(M)
+    c_l = np.empty(M)
+    c_u = np.empty(M)
+    dlt = np.empty(M)
+    last_pop = np.full(p.K, -1, np.int32)
+    for r in range(M):
+        ev = tl.queue.pop()
+        veh[r], cyc[r] = ev.vehicle, ev.cycle
+        dlr[r] = last_pop[ev.vehicle]
+        times[r], c_l[r], c_u[r] = ev.time, ev.train_delay, ev.upload_delay
+        dlt[r] = ev.download_time
+        last_pop[ev.vehicle] = r
+        tl.schedule(ev.vehicle, ev.time)
+        tl.prune()
+
+    # Wave partition — identical to the batched engine's rule: a wave trains
+    # every not-yet-trained consumed upload whose payload round has already
+    # completed, then the scan segment consumes pops up to the first event
+    # scheduled *during* that segment.
+    waves = []
+    trained = np.zeros(M, bool)
+    s = 0
+    while s < M:
+        T = np.where(~trained & (dlr < s))[0]
+        trained[T] = True
+        untrained = np.where(~trained)[0]
+        e = int(untrained[0]) if len(untrained) else M
+        waves.append((tuple(int(x) for x in T), s, e))
+        s = e
+
+    return FleetPlan(veh=veh, cycle=cyc, dl_round=dlr, times=times,
+                     train_delay=c_l, upload_delay=c_u, download_time=dlt,
+                     waves=tuple(waves), n_slots=tl.gains.last_slot + 3,
+                     q0=q0)
+
+
+# ---------------------------------------------------------------------------
+# the compiled program
+# ---------------------------------------------------------------------------
+# LRU-bounded: one compiled program per world *structure*; long-lived
+# processes sweeping many worlds (hypothesis conformance, seed sweeps) must
+# not retain every executable forever (the gain-cache lesson from PR 1)
+from collections import OrderedDict
+
+_PROGRAM_CACHE: OrderedDict = OrderedDict()
+_PROGRAM_CACHE_SIZE = 32
+
+
+def _mesh_key(mesh) -> tuple:
+    if mesh is None:
+        return ()
+    return (tuple(mesh.shape.items()),)
+
+
+def _wave_train(local_scan, mesh, n_events, shared: bool):
+    """The wave-training block: vmap over events, optionally sharded over
+    the mesh ``"data"`` axis via shard_map (DESIGN.md §5, §9)."""
+    axes = (None if shared else 0, 0, 0, None)
+    f = jax.vmap(local_scan, in_axes=axes)
+    if mesh is None or "data" not in mesh.shape:
+        return f
+    n_data = mesh.shape["data"]
+    if n_events % n_data != 0:
+        return f                      # ragged wave: replicate instead
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    pay_spec = P() if shared else P("data")
+    return shard_map(f, mesh=mesh,
+                     in_specs=(pay_spec, P("data"), P("data"), P()),
+                     out_specs=(P("data"), P("data")), check_rep=False)
+
+
+def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
+                   interpretation: str, use_kernel: bool, mesh,
+                   fedasync_mix: float):
+    """Trace-time constants live in the closure; the returned function is
+    cached on the plan/world structure so repeated runs of the same world
+    (determinism tests, warm benchmarks) compile exactly once."""
+    M = len(plan.veh)
+    K = p.K
+    d = np.asarray(plan.dl_round)
+    beta = jnp.float32(p.beta)
+    gamma = jnp.float32(p.gamma)
+    zeta = jnp.float32(p.zeta)
+    f_mix = jnp.float32(fedasync_mix)
+    v_c = jnp.float32(p.v)
+    cov = jnp.float32(p.coverage)
+    dy2H2 = jnp.float32(p.d_y ** 2 + p.H ** 2)
+    pm = jnp.float32(p.p_m)
+    alpha_pl = jnp.float32(p.alpha)
+    sigma2 = jnp.float32(p.sigma2)
+    bw = jnp.float32(p.B)
+    bits = jnp.float32(p.model_bits)
+    n_slots = plan.n_slots
+
+    def aggregate(g, loc, t, cu, cl, dl_t):
+        """One arrival's update — mirrors the host paths bit-for-bit in
+        formula and f32 arithmetic (aggregation.mix_update_donated /
+        literal_update_donated / weighted_agg kernel)."""
+        if scheme == "mafl":
+            weight = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)   # Eqs. 7, 9
+        else:
+            weight = jnp.float32(1.0)
+        if scheme == "mafl" and interpretation == "literal":
+            if use_kernel:
+                from repro.kernels.weighted_agg import ops as agg_ops
+                return agg_ops.weighted_agg_tree(g, loc, beta, weight), weight
+            new = jax.tree_util.tree_map(
+                lambda a, b: (beta * a.astype(jnp.float32) +
+                              (1.0 - beta) * weight *
+                              b.astype(jnp.float32)).astype(a.dtype), g, loc)
+            return new, weight
+        if scheme == "mafl":
+            alpha = jnp.clip((1.0 - beta) * weight, 0.0, 1.0)
+        elif scheme == "afl":
+            alpha = 1.0 - beta
+        else:                                                   # fedasync
+            stale = jnp.maximum(t - dl_t, 0.0)
+            alpha = f_mix * (stale + 1.0) ** (-0.5)
+        if use_kernel:
+            from repro.kernels.weighted_agg import ops as agg_ops
+            return agg_ops.weighted_agg_tree(g, loc, 1.0 - alpha,
+                                             jnp.float32(1.0)), weight
+        new = jax.tree_util.tree_map(
+            lambda a, b: ((1.0 - alpha) * a.astype(jnp.float32) +
+                          alpha * b.astype(jnp.float32)).astype(a.dtype),
+            g, loc)
+        return new, weight
+
+    def program(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, lr):
+        local_scan = client_mod._local_scan
+        ring = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((M + 1,) + x.shape, x.dtype).at[0].set(x), w0)
+        locals_buf = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((M,) + x.shape, x.dtype), w0)
+        g = w0
+        traces = []
+
+        def make_seg_body(locals_buf):
+            # A *fresh* body function per scan segment: lax.scan caches the
+            # traced body jaxpr on the function's identity plus per-step
+            # avals, which are identical for every segment — reusing one
+            # closure across segments silently replays the first segment's
+            # capture of ``locals_buf`` and aggregates zeros for every
+            # later wave.
+            def seg_body(carry, r):
+                g, ring, qt, qdl, qcu = carry
+                i = jnp.argmin(qt)                              # pop
+                t, cu, cl, dl_t = qt[i], qcu[i], qcl[i], qdl[i]
+                loc = jax.tree_util.tree_map(lambda B: B[r], locals_buf)
+                g, weight = aggregate(g, loc, t, cu, cl, dl_t)  # Eq. 10+11
+                ring = jax.tree_util.tree_map(
+                    lambda R, G: R.at[r + 1].set(G), ring, g)
+                # re-schedule vehicle i: download now, train C_l, upload C_u
+                t_up = t + cl
+                slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
+                gain = gains[slot, i]
+                dx = x0[i] + v_c * t_up                         # Eq. 3 + wrap
+                dx = jnp.mod(dx + cov, 2.0 * cov) - cov
+                dist = jnp.sqrt(dx * dx + dy2H2)                # Eq. 4
+                snr = pm * gain * dist ** (-alpha_pl) / sigma2
+                rate = bw * jnp.log2(1.0 + snr)                 # Eq. 5
+                cu_new = bits / jnp.maximum(rate, 1e-12)        # Eq. 6
+                qt = qt.at[i].set(t_up + cu_new)
+                qdl = qdl.at[i].set(t)
+                qcu = qcu.at[i].set(cu_new)
+                return (g, ring, qt, qdl, qcu), (i, t, cu, cl, dl_t, weight)
+            return seg_body
+
+        for T, s, e in plan.waves:
+            T = np.asarray(T, np.int32)
+            if len(T):
+                pay_rounds = d[T] + 1
+                shared = bool((pay_rounds == pay_rounds[0]).all())
+                if shared:
+                    pay = jax.tree_util.tree_map(
+                        lambda R: R[int(pay_rounds[0])], ring)
+                else:
+                    idx = jnp.asarray(pay_rounds)
+                    pay = jax.tree_util.tree_map(lambda R: R[idx], ring)
+                train = _wave_train(local_scan, mesh, len(T), shared)
+                loc, _ = train(pay, imgs[T], labs[T], lr)
+                T_dev = jnp.asarray(T)
+                locals_buf = jax.tree_util.tree_map(
+                    lambda B, L: B.at[T_dev].set(L), locals_buf, loc)
+            carry, ys = jax.lax.scan(
+                make_seg_body(locals_buf), (g, ring, qt, qdl, qcu),
+                jnp.arange(s, e))
+            g, ring, qt, qdl, qcu = carry
+            traces.append(ys)
+        trace = tuple(jnp.concatenate([tr[k] for tr in traces])
+                      for k in range(6))
+        return g, ring, trace
+
+    return jax.jit(program)
+
+
+def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
+                 use_kernel, mesh, fedasync_mix, shapes):
+    # the trainer function rides in the key as the object itself, not its
+    # id(): ids are reused after GC, which could silently replay a program
+    # traced against a different (monkeypatched) trainer
+    key = (plan.waves, tuple(plan.dl_round.tolist()), plan.n_slots, p,
+           scheme, interpretation, use_kernel, fedasync_mix,
+           _mesh_key(mesh), shapes, client_mod._local_scan)
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is None:
+        prog = _build_program(plan, p, scheme=scheme,
+                              interpretation=interpretation,
+                              use_kernel=use_kernel, mesh=mesh,
+                              fedasync_mix=fedasync_mix)
+        _PROGRAM_CACHE[key] = prog
+        while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
+            _PROGRAM_CACHE.popitem(last=False)
+    else:
+        _PROGRAM_CACHE.move_to_end(key)
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# public entry point — signature mirrors mafl.run_simulation
+# ---------------------------------------------------------------------------
+def run_simulation_jit(
+    vehicles_data: Sequence[VehicleData],
+    test_images: np.ndarray,
+    test_labels: np.ndarray,
+    *,
+    scheme: str = "mafl",
+    rounds: int = 60,
+    l_iters: int = 5,
+    lr: float = 0.01,
+    params: Optional[ChannelParams] = None,
+    seed: int = 0,
+    eval_every: int = 1,
+    use_kernel: bool = False,
+    init_params=None,
+    interpretation: str = "mixing",
+    progress=None,
+    batch_size: int = 128,
+    mesh=None,
+):
+    """Run M rounds entirely on device; returns the same ``SimResult`` the
+    host engines produce (same record fields, same eval cadence).
+
+    One behavioral difference from the host engines: the whole round loop
+    is a single device program, so ``progress`` fires post-hoc — every
+    callback arrives in round order *after* the simulation completes, not
+    live per arrival."""
+    from repro.core.mafl import SimResult, evaluate
+
+    if scheme not in _SUPPORTED_SCHEMES:
+        raise ValueError(
+            f"engine='jit' supports schemes {_SUPPORTED_SCHEMES}, not "
+            f"{scheme!r} (fedbuff keeps host-side buffer state — use the "
+            "serial or batched engine)")
+    p = params or ChannelParams()
+    assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
+    if rounds < 1:
+        raise ValueError("rounds must be >= 1")
+
+    plan = plan_fleet(p, seed, rounds)
+    M = rounds
+
+    key = jax.random.PRNGKey(seed)
+    w0 = init_params if init_params is not None else init_cnn(key)
+
+    # one minibatch stack per consumed round, drawn from the same
+    # per-vehicle RNG streams in the same per-cycle order as the host
+    # engines (DESIGN.md §3), so every engine trains identical batches
+    fleet_batch = min(batch_size, min(d.size for d in vehicles_data))
+    clients = [Vehicle(d, lr=lr, batch_size=fleet_batch, seed=seed)
+               for d in vehicles_data]
+    im_list, lab_list = [], []
+    for r in range(M):
+        im, lab = clients[plan.veh[r]].sample_batches(l_iters)
+        im_list.append(im)
+        lab_list.append(lab)
+    imgs = jnp.asarray(np.stack(im_list))
+    labs = jnp.asarray(np.stack(lab_list))
+
+    gains = jnp.asarray(slot_gain_table(p, seed, plan.n_slots), jnp.float32)
+    x0 = jnp.asarray(Mobility(p).x0, jnp.float32)
+    qt = jnp.asarray(plan.q0["time"], jnp.float32)
+    qdl = jnp.asarray(plan.q0["download_time"], jnp.float32)
+    qcu = jnp.asarray(plan.q0["upload_delay"], jnp.float32)
+    qcl = jnp.asarray(plan.q0["train_delay"], jnp.float32)
+
+    shapes = (imgs.shape, tuple(
+        (str(path), v.shape, str(v.dtype))
+        for path, v in jax.tree_util.tree_leaves_with_path(w0)))
+    prog = _get_program(plan, p, scheme=scheme, interpretation=interpretation,
+                        use_kernel=use_kernel, mesh=mesh,
+                        fedasync_mix=0.5, shapes=shapes)
+    g, ring, trace = prog(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
+                          jnp.float32(lr))
+    t_veh, t_time, t_cu, t_cl, t_dlt, t_w = (np.asarray(x) for x in trace)
+
+    # divergence guard: the minibatch stacks were paired to rounds by the
+    # host plan — if the device pop order ever disagreed, fail loudly
+    # (mirrors the batched engine's dry-run guard) instead of silently
+    # training the wrong vehicle's batches.
+    if not np.array_equal(t_veh, plan.veh):
+        bad = int(np.argmax(t_veh != plan.veh))
+        raise RuntimeError(
+            "jit engine: device pop order diverged from the host dry run "
+            f"at round {bad} (device vehicle {int(t_veh[bad])}, host "
+            f"{int(plan.veh[bad])}) — f32 time ties are not expected")
+    if not np.allclose(t_time, plan.times, rtol=1e-4, atol=1e-3):
+        bad = int(np.argmax(~np.isclose(t_time, plan.times,
+                                        rtol=1e-4, atol=1e-3)))
+        raise RuntimeError(
+            "jit engine: device event times diverged from the host dry run "
+            f"at round {bad}: {t_time[bad]} vs {plan.times[bad]}")
+
+    result = SimResult(scheme=scheme, rounds=[], acc_history=[],
+                       loss_history=[], final_params=g)
+    for r in range(M):
+        rec = RoundRecord(round=r + 1, time=float(t_time[r]),
+                          vehicle=int(t_veh[r]),
+                          upload_delay=float(t_cu[r]),
+                          train_delay=float(t_cl[r]),
+                          weight=float(t_w[r]))
+        rr = r + 1
+        if rr % eval_every == 0 or rr == rounds:
+            params_r = jax.tree_util.tree_map(lambda R: R[rr], ring)
+            acc, loss = evaluate(params_r, test_images, test_labels)
+            rec.accuracy, rec.loss = acc, loss
+            result.acc_history.append((rr, acc))
+            result.loss_history.append((rr, loss))
+            if progress:
+                progress(rr, acc)
+        result.rounds.append(rec)
+    return result

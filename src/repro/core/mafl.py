@@ -19,6 +19,15 @@ Two engines share identical event semantics (DESIGN.md §2-§3):
     program.  Aggregation still consumes events strictly in time order, so
     the (round, vehicle, time) sequence is bit-identical to the serial
     engine — verified by ``tests/test_engine_equivalence.py``.
+
+``engine="jit"``
+    Device-resident (DESIGN.md §9, ``core/jit_engine.py``): the event
+    queue becomes fixed per-vehicle slot arrays, slot gains a precomputed
+    table, payload snapshots a round-indexed ring, and pop → aggregate →
+    re-schedule for all M rounds runs inside one compiled program with
+    training hoisted into per-wave vmap blocks.  Same (round, vehicle)
+    trace as the host engines with times carried in f32 — pinned by
+    ``tests/test_engine_conformance.py``.
 """
 from __future__ import annotations
 
@@ -36,6 +45,11 @@ from repro.core.client import Vehicle, VehicleData, local_update_many
 from repro.core.events import EventQueue
 from repro.core.server import RSUServer
 from repro.models.cnn import cnn_forward, init_cnn
+
+
+# accepted run_simulation/run_scenario engine names ('unbatched' is a
+# legacy alias for 'serial')
+ENGINES = ("batched", "serial", "unbatched", "jit")
 
 
 @dataclass
@@ -116,8 +130,19 @@ def run_simulation(
     D_i)`` — so one world compiles exactly one local-training shape (the
     per-vehicle *data volume* heterogeneity that Eq. 8 feeds on lives in
     the delays, not the minibatch; DESIGN.md §6)."""
-    if engine not in ("batched", "serial", "unbatched"):
-        raise ValueError(f"unknown engine {engine!r}")
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; expected one of {ENGINES}")
+    if engine == "jit":
+        # device-resident mega-fleet engine (DESIGN.md §9): whole round
+        # loop in one compiled program, same event semantics and records
+        from repro.core.jit_engine import run_simulation_jit
+        return run_simulation_jit(
+            vehicles_data, test_images, test_labels, scheme=scheme,
+            rounds=rounds, l_iters=l_iters, lr=lr, params=params, seed=seed,
+            eval_every=eval_every, use_kernel=use_kernel,
+            init_params=init_params, interpretation=interpretation,
+            progress=progress, batch_size=batch_size)
     p = params or ChannelParams()
     assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
     key = jax.random.PRNGKey(seed)

@@ -28,7 +28,8 @@ import numpy as np
 from repro.channel import ChannelParams
 from repro.core.client import Vehicle
 from repro.core.hierarchical import reconcile_models
-from repro.core.mafl import SimResult, _Timeline, evaluate, run_simulation
+from repro.core.mafl import (ENGINES, SimResult, _Timeline, evaluate,
+                             run_simulation)
 from repro.core.server import RSUServer
 
 
@@ -111,6 +112,31 @@ register(Scenario(
     n_train=4000, n_test=800, dirichlet_alpha=0.3,
 ))
 register(Scenario(
+    name="fleet-k1000",
+    description="Mega-fleet: 1000 vehicles under one RSU, single local "
+                "step per download (many clients x few local iterations); "
+                "sized for engine='jit' (DESIGN.md §9) — the snapshot ring "
+                "holds rounds+1 models instead of 1000 payloads.",
+    K=1000, rounds=30, l_iters=1, scale=0.004, max_per_vehicle=256,
+    n_train=4000, n_test=400,
+))
+register(Scenario(
+    name="fleet-k1000-noniid",
+    description="Mega-fleet with Dirichlet(0.3) class-skewed shards.",
+    K=1000, rounds=30, l_iters=1, scale=0.004, max_per_vehicle=256,
+    n_train=4000, n_test=400, dirichlet_alpha=0.3,
+))
+register(Scenario(
+    name="platoon-burst-k500",
+    description="Bursty arrivals: 500 vehicles in platoons of 25 sharing "
+                "the leader's compute/data (identical training delays), so "
+                "uploads land in near-simultaneous bursts — stress test "
+                "for time-ordered consumption under the jit engine.",
+    K=500, rounds=40, l_iters=1, scale=0.005, max_per_vehicle=256,
+    n_train=4000, n_test=400,
+    channel_overrides=(("platoon", 25),),
+))
+register(Scenario(
     name="highway-k40-handover",
     description="Four-RSU corridor, 40 vehicles with handover and "
                 "periodic cross-RSU reconciliation.",
@@ -139,8 +165,9 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
                  progress=None, **overrides) -> SimResult:
     """Build the named world and run it; ``overrides`` replace Scenario
     fields (e.g. ``rounds=20`` for a shortened run)."""
-    if engine not in ("batched", "serial", "unbatched"):
-        raise ValueError(f"unknown engine {engine!r}")
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; expected one of {ENGINES}")
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if overrides:
         sc = dataclasses.replace(sc, **overrides)

@@ -30,8 +30,16 @@ def _agg_kernel(scal_ref, g_ref, l_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def weighted_agg_2d(g, l, scalars, *, block_rows=DEFAULT_BLOCK_ROWS,
-                    interpret=True):
-    """g, l: [R, 128] same dtype; scalars: f32[1, 2] = (beta, weight)."""
+                    interpret=None):
+    """g, l: [R, 128] same dtype; scalars: f32[1, 2] = (beta, weight).
+
+    ``interpret=None`` (default) selects the mode from the backend: the
+    kernel body runs through the Pallas interpreter on CPU (where no Mosaic
+    lowering exists) and compiles on TPU/GPU.  Pass an explicit bool to
+    force a mode — parity across modes and backends is pinned by
+    ``tests/test_kernels.py``."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
     R = g.shape[0]
     br = min(block_rows, R)
     return pl.pallas_call(

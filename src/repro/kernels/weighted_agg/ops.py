@@ -1,10 +1,12 @@
 """Jit'd public wrapper: applies the fused aggregation kernel to arbitrary
 pytrees by flattening every leaf into lane-aligned (R, 128) tiles.
 
-On this CPU container the kernel body executes via interpret=True; on TPU the
-same ``pallas_call`` compiles to a VMEM-tiled streaming kernel.  Leaves too
-small to tile (< 128 elements) fall through to the jnp oracle — the traffic
-they contribute is negligible.
+``interpret=None`` (default) picks the execution mode per backend — the
+Pallas interpreter on CPU, a compiled VMEM-tiled streaming kernel on
+TPU/GPU (the hardcoded ``interpret=True`` default used to force the
+interpreter even on accelerators).  Leaves too small to tile (< 128
+elements) fall through to the jnp oracle — the traffic they contribute is
+negligible.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ from repro.kernels.weighted_agg import ref
 from repro.kernels.weighted_agg.kernel import LANE, weighted_agg_2d
 
 
-def weighted_agg_leaf(g, l, beta: float, weight: float, interpret=True):
+def weighted_agg_leaf(g, l, beta: float, weight: float, interpret=None):
     if g.size < LANE:
         return ref.weighted_agg(g, l, beta, weight)
     scalars = jnp.asarray([[beta, weight]], jnp.float32)
@@ -34,7 +36,7 @@ def weighted_agg_leaf(g, l, beta: float, weight: float, interpret=True):
 
 
 def weighted_agg_tree(global_params, local_params, beta: float,
-                      weight: float, interpret=True):
+                      weight: float, interpret=None):
     """Drop-in for ``aggregation.mafl_update(..., use_kernel=True)``."""
     return jax.tree_util.tree_map(
         lambda g, l: weighted_agg_leaf(g, l, beta, weight, interpret),

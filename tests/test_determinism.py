@@ -1,0 +1,96 @@
+"""Determinism regression: the same (seed, scenario) must reproduce the
+simulation bit-for-bit — identical round traces and bitwise-equal final
+parameters across two runs — for every engine, plus clear errors for
+unknown engine/scenario names."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.client as client_mod
+from repro.channel.params import ChannelParams
+from repro.core import run_simulation
+from repro.core.scenarios import run_scenario
+from repro.data import partition_vehicles, synth_mnist
+
+ENGINES = ("serial", "batched", "jit")
+
+
+def _fake_local_scan(params, images, labels, lr):
+    h = (jnp.mean(images.astype(jnp.float32))
+         + jnp.mean(labels.astype(jnp.float32)))
+    out = jax.tree_util.tree_map(
+        lambda w: w * (1.0 - lr * 0.01) + 1e-3 * h, params)
+    return out, h
+
+
+@pytest.fixture()
+def stub_trainer(monkeypatch):
+    monkeypatch.setattr(client_mod, "_local_scan", _fake_local_scan)
+    monkeypatch.setattr(client_mod, "_local_scan_jit", _fake_local_scan)
+    monkeypatch.setattr(
+        client_mod, "_local_scan_vmap",
+        jax.vmap(_fake_local_scan, in_axes=(0, 0, 0, None)))
+
+
+@pytest.fixture(scope="module")
+def k4_world():
+    tr_i, tr_l, te_i, te_l = synth_mnist(n_train=600, n_test=120, seed=0,
+                                         noise=0.35)
+    p = dataclasses.replace(ChannelParams(), K=4)
+    veh = partition_vehicles(tr_i, tr_l, p, seed=0, scale=0.012)
+    return veh, te_i, te_l, p
+
+
+def _trace(r):
+    return [(rec.round, rec.vehicle, rec.time, rec.upload_delay,
+             rec.train_delay, rec.weight) for rec in r.rounds]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_same_seed_bitwise_identical(engine, k4_world, stub_trainer):
+    veh, te_i, te_l, p = k4_world
+    runs = [run_simulation(veh, te_i, te_l, scheme="mafl", rounds=7,
+                           l_iters=2, lr=0.05, eval_every=7, seed=3,
+                           params=p, engine=engine) for _ in range(2)]
+    assert _trace(runs[0]) == _trace(runs[1])       # bitwise: == on floats
+    assert runs[0].acc_history == runs[1].acc_history
+    for x, y in zip(jax.tree_util.tree_leaves(runs[0].final_params),
+                    jax.tree_util.tree_leaves(runs[1].final_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_jit_engine_real_cnn_bitwise_identical(k4_world):
+    """Un-stubbed double run of the compiled engine (the cached program is
+    replayed, so this also guards the program-cache keying)."""
+    veh, te_i, te_l, p = k4_world
+    runs = [run_simulation(veh, te_i, te_l, scheme="mafl", rounds=4,
+                           l_iters=1, lr=0.05, eval_every=4, seed=0,
+                           params=p, engine="jit") for _ in range(2)]
+    assert _trace(runs[0]) == _trace(runs[1])
+    for x, y in zip(jax.tree_util.tree_leaves(runs[0].final_params),
+                    jax.tree_util.tree_leaves(runs[1].final_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_different_seeds_differ(k4_world, stub_trainer):
+    veh, te_i, te_l, p = k4_world
+    a, b = (run_simulation(veh, te_i, te_l, scheme="mafl", rounds=7,
+                           l_iters=2, lr=0.05, eval_every=7, seed=s,
+                           params=p, engine="jit") for s in (0, 1))
+    assert _trace(a) != _trace(b)
+
+
+def test_unknown_engine_rejected_with_clear_error(k4_world):
+    veh, te_i, te_l, p = k4_world
+    with pytest.raises(ValueError, match="unknown engine 'warp'"):
+        run_simulation(veh, te_i, te_l, rounds=2, params=p, engine="warp")
+    with pytest.raises(ValueError, match="expected one of.*'jit'"):
+        run_scenario("quick-k5", engine="warp")
+
+
+def test_unknown_scenario_rejected_with_known_names():
+    with pytest.raises(KeyError, match="unknown scenario 'nope'.*quick-k5"):
+        run_scenario("nope")

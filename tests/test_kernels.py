@@ -42,6 +42,51 @@ def test_weighted_agg_property(n, beta, weight):
     np.testing.assert_allclose(out, expect, atol=1e-5)
 
 
+@pytest.mark.parametrize("rows", [1, 7, 255, 300])      # != 0 mod block_rows
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("interpret", [True, None])
+def test_weighted_agg_2d_rows_dtypes_interpret(rows, dtype, interpret):
+    """Direct [R, 128] kernel parity vs the jnp oracle for row counts that
+    are not multiples of the block size, both dtypes, and both the forced
+    interpreter and the backend-resolved default."""
+    from repro.kernels.weighted_agg.kernel import weighted_agg_2d
+    g = jax.random.normal(jax.random.PRNGKey(0), (rows, 128)).astype(dtype)
+    l = jax.random.normal(jax.random.PRNGKey(1), (rows, 128)).astype(dtype)
+    scalars = jnp.asarray([[0.5, 0.93]], jnp.float32)
+    out = weighted_agg_2d(g, l, scalars, block_rows=64, interpret=interpret)
+    expect = agg_ref.weighted_agg(g, l, 0.5, 0.93)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+    assert out.dtype == g.dtype
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="compiled (non-interpret) Pallas needs TPU/GPU")
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_weighted_agg_2d_compiled_mode(dtype):
+    """On an accelerator the backend-resolved default must agree with the
+    explicitly compiled kernel and the oracle."""
+    from repro.kernels.weighted_agg.kernel import weighted_agg_2d
+    g = jax.random.normal(jax.random.PRNGKey(0), (300, 128)).astype(dtype)
+    l = jax.random.normal(jax.random.PRNGKey(1), (300, 128)).astype(dtype)
+    scalars = jnp.asarray([[0.5, 0.93]], jnp.float32)
+    out = weighted_agg_2d(g, l, scalars, interpret=False)
+    expect = agg_ref.weighted_agg(g, l, 0.5, 0.93)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+def test_weighted_agg_default_resolves_by_backend():
+    """interpret=None must pick the interpreter exactly on CPU."""
+    from repro.kernels.weighted_agg import ops as agg_ops_mod
+    g = jnp.ones((5, 100))           # non-multiple-of-128 leaf: tail path
+    l = jnp.full((5, 100), 3.0)
+    out = agg_ops_mod.weighted_agg_leaf(g, l, 0.5, 1.0)
+    np.testing.assert_allclose(out, 2.0 * jnp.ones((5, 100)), atol=1e-6)
+
+
 def test_weighted_agg_tree_matches_treemap():
     tree_g = {"a": jnp.ones((300,)), "b": {"c": jnp.full((5, 40), 2.0)}}
     tree_l = {"a": jnp.full((300,), 3.0), "b": {"c": jnp.ones((5, 40))}}

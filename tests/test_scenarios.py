@@ -48,6 +48,34 @@ def test_quick_scenario_runs_batched():
     assert times == sorted(times)
 
 
+def test_quick_scenario_runs_jit():
+    r = run_scenario("quick-k5", rounds=4, eval_every=2, engine="jit",
+                     l_iters=1)
+    assert len(r.rounds) == 4
+    assert all(np.isfinite(a) for _, a in r.acc_history)
+    times = [rec.time for rec in r.rounds]
+    assert times == sorted(times)
+
+
+def test_mega_fleet_scenarios_registered():
+    names = list_scenarios()
+    for name in ("fleet-k1000", "fleet-k1000-noniid", "platoon-burst-k500"):
+        assert name in names
+    sc = get_scenario("fleet-k1000")
+    assert sc.K == 1000 and sc.rounds == 30
+
+
+def test_platoon_burst_world_has_convoy_delays():
+    from repro.channel import training_delay
+    sc = get_scenario("platoon-burst-k500")
+    p = sc.channel()
+    assert p.platoon == 25 and p.K == 500
+    # convoy members share the leader's training delay
+    assert training_delay(p, 1) == training_delay(p, 25)
+    assert training_delay(p, 26) == training_delay(p, 50)
+    assert training_delay(p, 1) != training_delay(p, 26)
+
+
 def test_scenario_overrides_replace_fields():
     sc = get_scenario("fleet-k100")
     r = dataclasses.replace(sc, rounds=7)

@@ -1,0 +1,114 @@
+"""Dedicated coverage for the staleness-aware baselines the paper is
+compared against: FedAsync's polynomial staleness discount and FedBuff's
+buffered flushes (``core/aggregation.py``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (FedBuffAggregator, _ema,
+                                    fedasync_update)
+
+
+def _alpha_of(g_val, l_val, out_val):
+    """Recover the effective mixing alpha from out = (1-a) g + a l."""
+    return float((out_val - g_val) / (l_val - g_val))
+
+
+def _scalar_trees(g_val=1.0, l_val=3.0):
+    return ({"w": jnp.full((4,), g_val)}, {"w": jnp.full((4,), l_val)})
+
+
+# ---------------------------------------------------------------------------
+# FedAsync (Xie et al. 2019): alpha = base_mix * (staleness + 1)^-a
+# ---------------------------------------------------------------------------
+def test_fedasync_zero_staleness_recovers_plain_mixing():
+    g, l = _scalar_trees()
+    out = fedasync_update(g, l, base_mix=0.5, staleness=0.0)
+    expect = _ema(g, l, 1.0 - 0.5)
+    np.testing.assert_allclose(out["w"], expect["w"], atol=1e-7)
+    assert _alpha_of(1.0, 3.0, float(out["w"][0])) == pytest.approx(0.5)
+
+
+def test_fedasync_alpha_monotonically_decreasing_in_staleness():
+    g, l = _scalar_trees()
+    alphas = []
+    for s in [0.0, 0.5, 1.0, 2.0, 4.0, 8.0, 32.0]:
+        out = fedasync_update(g, l, base_mix=0.5, staleness=s)
+        alphas.append(_alpha_of(1.0, 3.0, float(out["w"][0])))
+    assert all(a > b for a, b in zip(alphas, alphas[1:]))
+    assert all(0.0 < a <= 0.5 for a in alphas)
+
+
+def test_fedasync_polynomial_discount_exact():
+    g, l = _scalar_trees()
+    for s, a_exp in [(0.0, 0.5), (3.0, 0.25), (24.0, 0.1)]:
+        out = fedasync_update(g, l, base_mix=0.5, staleness=s, a=0.5)
+        assert _alpha_of(1.0, 3.0, float(out["w"][0])) == pytest.approx(
+            0.5 * (s + 1.0) ** -0.5) == pytest.approx(a_exp)
+
+
+def test_fedasync_preserves_dtype_and_structure():
+    g = {"a": jnp.ones((3, 2), jnp.bfloat16), "b": [jnp.zeros(5)]}
+    l = {"a": jnp.full((3, 2), 2.0, jnp.bfloat16), "b": [jnp.ones(5)]}
+    out = fedasync_update(g, l, base_mix=0.4, staleness=1.0)
+    assert out["a"].dtype == jnp.bfloat16 and out["b"][0].shape == (5,)
+
+
+# ---------------------------------------------------------------------------
+# FedBuff (Nguyen et al. 2022): buffer deltas, flush at buffer_size
+# ---------------------------------------------------------------------------
+def test_fedbuff_flushes_exactly_at_buffer_size():
+    agg = FedBuffAggregator(buffer_size=3, lr=1.0)
+    g = {"w": jnp.zeros(2)}
+    flushed = []
+    for k in range(7):
+        l = {"w": jnp.full(2, float(k + 1))}
+        g_new, did = agg.add(g, l)
+        flushed.append(did)
+        if not did:
+            # no flush: the global model must be returned unchanged
+            np.testing.assert_array_equal(g_new["w"], g["w"])
+        g = g_new
+    # flushes at the 3rd and 6th add, nowhere else
+    assert flushed == [False, False, True, False, False, True, False]
+
+
+def test_fedbuff_mean_delta_correctness():
+    agg = FedBuffAggregator(buffer_size=3, lr=1.0)
+    g = {"w": jnp.full(3, 10.0)}
+    for v in (13.0, 16.0, 19.0):               # deltas 3, 6, 9 -> mean 6
+        g_out, did = agg.add(g, {"w": jnp.full(3, v)})
+    assert did
+    np.testing.assert_allclose(g_out["w"], np.full(3, 16.0), atol=1e-6)
+    # buffer cleared after the flush: next adds count from zero again
+    _, did = agg.add(g_out, {"w": jnp.full(3, 0.0)})
+    assert not did
+
+
+def test_fedbuff_server_lr_scales_flush():
+    agg = FedBuffAggregator(buffer_size=2, lr=0.5)
+    g = {"w": jnp.zeros(1)}
+    agg.add(g, {"w": jnp.full(1, 4.0)})
+    g_out, did = agg.add(g, {"w": jnp.full(1, 8.0)})
+    assert did
+    np.testing.assert_allclose(g_out["w"], [3.0], atol=1e-6)   # 0.5 * 6
+
+
+def test_fedbuff_through_server_scheme():
+    """RSUServer('fedbuff') path: rounds advance every arrival, the model
+    only at flush arrivals."""
+    from repro.channel.params import ChannelParams
+    from repro.core.server import RSUServer
+    p = ChannelParams()
+    g0 = {"w": jnp.zeros(2)}
+    srv = RSUServer(g0, p, scheme="fedbuff", fedbuff_size=2)
+    srv.receive({"w": jnp.full(2, 2.0)}, time=1.0, vehicle=0,
+                upload_delay=0.1, train_delay=0.1, download_time=0.0)
+    np.testing.assert_array_equal(np.asarray(srv.global_params["w"]),
+                                  np.zeros(2))
+    srv.receive({"w": jnp.full(2, 4.0)}, time=2.0, vehicle=1,
+                upload_delay=0.1, train_delay=0.1, download_time=0.0)
+    np.testing.assert_allclose(np.asarray(srv.global_params["w"]),
+                               np.full(2, 3.0), atol=1e-6)
+    assert srv.round == 2
