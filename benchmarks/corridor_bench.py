@@ -1,0 +1,101 @@
+"""Corridor engine benchmark (ISSUE 3 acceptance artifact).
+
+Measures per-round wall-clock of the device-resident ``engine="corridor"``
+against the retired serial handover reference, writing everything to
+``benchmarks/results/BENCH_corridor.json``:
+
+- **r4-k400 direct**: both engines run outright on the identical
+  ``corridor-r4-k400`` world — the honest same-work comparison.
+- **r8-k4000**: the corridor engine runs the mega-corridor directly; the
+  serial path is *extrapolated* from its r4-k400 per-round cost with the
+  conservative flat model (per-round cost treated as K- and R-independent;
+  the serial loop's per-arrival scheduling and per-RSU bookkeeping are
+  K-linear, so any such term only raises the real number).
+
+``python -m benchmarks.run corridor [rounds]``; QUICK=1 swaps in
+``corridor-quick-r2-k8`` through both engines (the CI smoke artifact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import save_result
+from repro.core.scenarios import build_world, get_scenario
+
+
+def _timed(sc, world, engine, rounds, seed=0):
+    from repro.corridor.engine import run_corridor_simulation
+    from repro.corridor.reference import run_handover_simulation
+    veh, te_i, te_l, p = world
+    run = (run_handover_simulation if engine == "serial"
+           else run_corridor_simulation)
+    scr = dataclasses.replace(sc, rounds=rounds)
+    t0 = time.perf_counter()
+    r = run(scr, veh, te_i, te_l, p, seed=seed, eval_every=rounds)
+    return time.perf_counter() - t0, r
+
+
+def _bench_engine(sc, world, engine, rounds):
+    cold, r = _timed(sc, world, engine, rounds)
+    warm, r = _timed(sc, world, engine, rounds)
+    return {
+        "rounds": rounds,
+        "cold_s": round(cold, 3),
+        "warm_s": round(warm, 3),
+        "cold_ms_per_round": round(cold * 1e3 / rounds, 2),
+        "warm_ms_per_round": round(warm * 1e3 / rounds, 2),
+        "warm_rounds_per_s": round(rounds / warm, 2),
+        "final_accuracy": float(r.final_accuracy()),
+    }
+
+
+def run(rounds: int | None = None, quick: bool = False) -> dict:
+    direct_name = "corridor-quick-r2-k8" if quick else "corridor-r4-k400"
+    sc = get_scenario(direct_name)
+    rounds = rounds or sc.rounds
+    serial_rounds = min(rounds, 8 if quick else 24)
+
+    print(f"building {direct_name} (K={sc.K}, R={sc.n_rsus}) ...")
+    world = build_world(sc, seed=0)
+    payload = {"direct_scenario": direct_name, "K": sc.K,
+               "n_rsus": sc.n_rsus, "engines": {}}
+
+    for engine, n in (("serial", serial_rounds), ("corridor", rounds)):
+        stats = _bench_engine(sc, world, engine, n)
+        payload["engines"][engine] = stats
+        print(f"  {engine:8s}: cold {stats['cold_s']:7.1f}s  warm "
+              f"{stats['warm_s']:7.1f}s  ({stats['warm_ms_per_round']:.1f} "
+              f"ms/round, {stats['warm_rounds_per_s']:.1f} rounds/s warm)")
+    serial_ms = payload["engines"]["serial"]["warm_ms_per_round"]
+    direct_ms = payload["engines"]["corridor"]["warm_ms_per_round"]
+    payload["ratio_direct_same_world"] = round(serial_ms / direct_ms, 2)
+
+    if not quick:
+        # the mega-corridor: corridor engine direct, serial extrapolated
+        mega = get_scenario("corridor-r8-k4000")
+        mrounds = min(rounds, mega.rounds)
+        print(f"building corridor-r8-k4000 (K={mega.K}, R={mega.n_rsus}) "
+              "...")
+        mworld = build_world(mega, seed=0)
+        mstats = _bench_engine(mega, mworld, "corridor", mrounds)
+        payload["mega"] = {
+            "scenario": "corridor-r8-k4000", "K": mega.K,
+            "n_rsus": mega.n_rsus, "corridor": mstats,
+            "serial_extrapolated_ms_per_round": serial_ms,
+            "extrapolation_model":
+                "flat-in-K/R from corridor-r4-k400 (conservative: the "
+                "serial loop's per-arrival scheduling and per-RSU "
+                "bookkeeping scale with K and R, which only raises it)",
+        }
+        payload["ratio_vs_extrapolated"] = round(
+            serial_ms / mstats["warm_ms_per_round"], 2)
+        print(f"  r8-k4000 corridor {mstats['warm_ms_per_round']:.1f} "
+              f"ms/round vs serial extrapolated {serial_ms:.1f} ms/round "
+              f"-> {payload['ratio_vs_extrapolated']}x (direct same-world "
+              f"at r4-k400: {payload['ratio_direct_same_world']}x)")
+
+    path = save_result("BENCH_corridor_quick" if quick
+                       else "BENCH_corridor", payload)
+    print(f"wrote {path}")
+    return payload

@@ -10,6 +10,10 @@
                (DESIGN.md §9): ``python -m benchmarks.run fleet
                [scenario] [rounds]``; QUICK=1 smokes quick-k5 through
                serial/batched/jit
+  corridor   — multi-RSU corridor engine comparison ->
+               BENCH_corridor.json (DESIGN.md §10): serial reference vs
+               engine='corridor' at r4-k400 direct + r8-k4000;
+               QUICK=1 smokes corridor-quick-r2-k8
 
 ``python -m benchmarks.run``            runs everything (QUICK=1 shrinks the
 simulation rounds for CI-speed smoke runs).
@@ -63,6 +67,13 @@ def main() -> None:
         fleet_bench.run(quick=quick, **kw)
         return
 
+    if which == "corridor":
+        from benchmarks import corridor_bench
+        argv = sys.argv[2:]
+        kw = {"rounds": int(argv[0])} if argv else {}
+        corridor_bench.run(quick=quick, **kw)
+        return
+
     if which in ("all", "kernels"):
         print("== kernel microbenchmarks ==")
         from benchmarks import kernel_micro
@@ -92,6 +103,11 @@ def main() -> None:
         print("\n== Mega-fleet engine comparison ==")
         from benchmarks import fleet_bench
         fleet_bench.run(quick=quick)
+
+    if which == "all":
+        print("\n== Corridor engine comparison ==")
+        from benchmarks import corridor_bench
+        corridor_bench.run(quick=quick)
 
     print(f"\ntotal {time.time() - t0:.0f}s")
 

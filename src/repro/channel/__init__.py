@@ -1,7 +1,8 @@
-from repro.channel.mobility import Mobility
+from repro.channel.mobility import CorridorMobility, Mobility
 from repro.channel.fading import RayleighAR1, SlotGainCache, slot_gain_table
 from repro.channel.rate import shannon_rate, upload_delay, training_delay
 from repro.channel.params import ChannelParams
 
-__all__ = ["Mobility", "RayleighAR1", "SlotGainCache", "slot_gain_table",
-           "shannon_rate", "upload_delay", "training_delay", "ChannelParams"]
+__all__ = ["Mobility", "CorridorMobility", "RayleighAR1", "SlotGainCache",
+           "slot_gain_table", "shannon_rate", "upload_delay",
+           "training_delay", "ChannelParams"]

@@ -30,30 +30,57 @@ def pod_local_mafl(global_params, local_params, beta, weight):
         global_params, local_params)
 
 
+def ema_toward(params, target, tau: float, use_kernel: bool = False):
+    """One EMA step of every leaf toward ``target``:
+    ``(1 - tau) * params + tau * target``.  ``tau = 1`` is plain
+    assignment (FedAvg-style consensus); ``tau < 1`` keeps each cohort's
+    identity between reconciliations (the cloud tier's EMA mode).
+    ``use_kernel`` routes the mix through the fused Pallas
+    ``weighted_agg`` kernel (beta = 1 - tau, weight = 1)."""
+    if use_kernel:
+        from repro.kernels.weighted_agg import ops as agg_ops
+        return agg_ops.weighted_agg_tree(params, target, 1.0 - tau, 1.0)
+    return jax.tree_util.tree_map(
+        lambda g, c: ((1.0 - tau) * g.astype(jnp.float32) +
+                      tau * c.astype(jnp.float32)).astype(g.dtype),
+        params, target)
+
+
 def cross_pod_reconcile(params, mesh, pod_axis: str = "pod",
-                        shard_spec: P | None = None):
-    """Average the per-pod cohort models over the pod axis (one pmean per
-    leaf) — the only inter-pod traffic in the hierarchy.
+                        shard_spec: P | None = None, tau: float = 1.0,
+                        use_kernel: bool = False):
+    """Reconcile the per-pod cohort models over the pod axis — the only
+    inter-pod traffic in the hierarchy.  One pmean per leaf produces the
+    cross-pod mean; ``tau`` selects the mode:
+
+    - ``tau = 1`` (default, FedAvg): every pod adopts the mean outright —
+      the original consensus behavior.
+    - ``tau < 1`` (EMA): each pod moves a ``tau`` fraction toward the mean,
+      keeping some cohort identity between reconciliations (what the
+      corridor subsystem calls "ema" mode, DESIGN.md §10).
 
     ``shard_spec`` describes how each leaf's leading dim is laid out
     (default: sharded over (pod, data) — the FSDP layout the launcher
     uses); the pmean averages corresponding shards across pods."""
     spec = shard_spec if shard_spec is not None else P((pod_axis, "data"))
 
-    def avg(t):
-        return jax.tree_util.tree_map(
+    def step(t):
+        mean = jax.tree_util.tree_map(
             lambda x: jax.lax.pmean(x, pod_axis), t)
+        if tau == 1.0:
+            return mean
+        return ema_toward(t, mean, tau, use_kernel=use_kernel)
 
-    fn = shard_map(avg, mesh=mesh, in_specs=(spec,), out_specs=spec,
+    fn = shard_map(step, mesh=mesh, in_specs=(spec,), out_specs=spec,
                    check_rep=False)
     return fn(params)
 
 
 def reconcile_models(models):
-    """Host-level analogue of :func:`cross_pod_reconcile` for the multi-RSU
-    scenario engine (``core.scenarios``): plain mean of N cohort models held
-    as separate pytrees (no mesh required) — the same consensus step the
-    shard_map path performs with one pmean per leaf."""
+    """Host-level analogue of :func:`cross_pod_reconcile` for the serial
+    multi-RSU reference engine (``corridor.reference``): plain mean of N
+    cohort models held as separate pytrees (no mesh required).  EMA-mode
+    callers apply :func:`ema_toward` per cohort on top of this mean."""
     n = len(models)
     return jax.tree_util.tree_map(
         lambda *xs: (sum(x.astype(jnp.float32) for x in xs) / n).astype(

@@ -63,7 +63,7 @@ import numpy as np
 from repro.channel import ChannelParams, Mobility, slot_gain_table
 from repro.core import client as client_mod
 from repro.core.client import Vehicle, VehicleData
-from repro.core.server import RoundRecord
+from repro.core.server import DEFAULT_FEDASYNC_MIX, RoundRecord
 from repro.models.cnn import init_cnn
 
 _SUPPORTED_SCHEMES = ("mafl", "afl", "fedasync")
@@ -398,7 +398,7 @@ def run_simulation_jit(
         for path, v in jax.tree_util.tree_leaves_with_path(w0)))
     prog = _get_program(plan, p, scheme=scheme, interpretation=interpretation,
                         use_kernel=use_kernel, mesh=mesh,
-                        fedasync_mix=0.5, shapes=shapes)
+                        fedasync_mix=DEFAULT_FEDASYNC_MIX, shapes=shapes)
     g, ring, trace = prog(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
                           jnp.float32(lr))
     t_veh, t_time, t_cu, t_cl, t_dlt, t_w = (np.asarray(x) for x in trace)

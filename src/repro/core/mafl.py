@@ -31,7 +31,7 @@ Two engines share identical event semantics (DESIGN.md §2-§3):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -59,6 +59,9 @@ class SimResult:
     acc_history: list          # (round, accuracy)
     loss_history: list         # (round, loss)
     final_params: object = None
+    # engine-specific additions (e.g. the corridor engine's per-RSU trace
+    # and cohort snapshots) that don't fit the common record schema
+    extras: dict = field(default_factory=dict)
 
     def final_accuracy(self) -> float:
         return self.acc_history[-1][1] if self.acc_history else float("nan")

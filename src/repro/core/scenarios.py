@@ -12,25 +12,35 @@ them from a name:
     result = run_scenario("fleet-k100", rounds=20)
 
 Multi-RSU scenarios (``n_rsus > 1``) run a corridor of RSUs, each with its
-own :class:`RSUServer` cohort model; a vehicle uploads to the RSU serving
-its position at arrival time (handover), and every ``reconcile_every``
-arrivals the cohort models are averaged (``hierarchical.reconcile_models``
-— the host-level version of the cross-pod pmean).
+own cohort model; a vehicle uploads to the RSU serving its position at
+arrival time (handover), and every ``reconcile_every`` arrivals the cohort
+models are reconciled (FedAvg or EMA — the corridor-scale version of the
+hierarchical cross-pod pmean).  Two engines exist for them:
+``engine="corridor"`` (default — the device-resident ``repro.corridor``
+subsystem, DESIGN.md §10) and ``engine="serial"`` (the retired host loop in
+``corridor.reference``, kept as the conformance oracle).  Requesting a
+single-RSU engine for a corridor world — or vice versa — raises instead of
+silently substituting.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Optional
 
-import numpy as np
+from repro.channel import ChannelParams, CorridorMobility
+from repro.core.mafl import ENGINES, SimResult, run_simulation
+from repro.corridor.engine import run_corridor_simulation
+from repro.corridor.reference import run_handover_simulation
 
-from repro.channel import ChannelParams
-from repro.core.client import Vehicle
-from repro.core.hierarchical import reconcile_models
-from repro.core.mafl import (ENGINES, SimResult, _Timeline, evaluate,
-                             run_simulation)
-from repro.core.server import RSUServer
+# legacy alias: the corridor geometry now lives in channel/mobility.py as
+# the public, vectorized CorridorMobility (it used to be an ad-hoc
+# per-vehicle helper class here)
+_Corridor = CorridorMobility
+
+# engines valid for multi-RSU corridor scenarios ('serial' is the retired
+# reference loop; single-RSU worlds accept `ENGINES` instead)
+CORRIDOR_ENGINES = ("corridor", "serial")
 
 
 @dataclass(frozen=True)
@@ -53,6 +63,14 @@ class Scenario:
     # topology
     n_rsus: int = 1
     reconcile_every: int = 8
+    # cloud-tier reconciliation (multi-RSU only): "fedavg" = every cohort
+    # adopts the cross-RSU mean; "ema" = each cohort moves reconcile_tau
+    # toward it (DESIGN.md §10)
+    reconcile_mode: str = "fedavg"
+    reconcile_tau: float = 0.5
+    # initial corridor placement: "uniform" traffic or a "rush" wave
+    # packed into the westmost segment (CorridorMobility entry profiles)
+    corridor_entry: str = "uniform"
     # dataclasses.replace(...) overrides applied to ChannelParams
     channel_overrides: tuple = ()
 
@@ -143,6 +161,39 @@ register(Scenario(
     K=40, rounds=80, n_rsus=4, reconcile_every=8,
     scale=0.02, max_per_vehicle=512, n_train=4000, n_test=800,
 ))
+register(Scenario(
+    name="corridor-quick-r2-k8",
+    description="Two-RSU, eight-vehicle corridor smoke world for tests "
+                "and the CI corridor bench.",
+    K=8, rounds=8, l_iters=1, n_rsus=2, reconcile_every=4,
+    n_train=1200, n_test=240, scale=0.01,
+))
+register(Scenario(
+    name="corridor-r4-k400",
+    description="Conformance-sized corridor: four RSUs, 400 vehicles, "
+                "device-resident handover engine vs the serial reference.",
+    K=400, rounds=40, l_iters=1, n_rsus=4, reconcile_every=8,
+    scale=0.006, max_per_vehicle=256, n_train=4000, n_test=400,
+))
+register(Scenario(
+    name="corridor-r8-k4000",
+    description="Mega-corridor: eight RSUs, 4000 vehicles — four times "
+                "the largest single-RSU fleet; sized for "
+                "engine='corridor' (the serial reference is extrapolated "
+                "only, DESIGN.md §10).",
+    K=4000, rounds=40, l_iters=1, n_rsus=8, reconcile_every=8,
+    scale=0.0015, max_per_vehicle=128, n_train=4000, n_test=400,
+))
+register(Scenario(
+    name="corridor-rush-hour-r8-k4000",
+    description="Rush hour on the mega-corridor: 4000 vehicles in "
+                "platoons of 50 entering at the west end, a density wave "
+                "propagating down the eight RSU cells (bursty arrivals + "
+                "skewed per-RSU load).",
+    K=4000, rounds=40, l_iters=1, n_rsus=8, reconcile_every=8,
+    scale=0.0015, max_per_vehicle=128, n_train=4000, n_test=400,
+    corridor_entry="rush", channel_overrides=(("platoon", 50),),
+))
 
 
 def build_world(sc: Scenario, seed: int = 0):
@@ -161,130 +212,59 @@ def build_world(sc: Scenario, seed: int = 0):
 
 
 def run_scenario(scenario: str | Scenario, *, seed: int = 0,
-                 engine: str = "batched", eval_every: int = 10,
-                 progress=None, **overrides) -> SimResult:
+                 engine: Optional[str] = None, eval_every: int = 10,
+                 progress=None, use_kernel: bool = False, mesh=None,
+                 record_cohorts: bool = False, **overrides) -> SimResult:
     """Build the named world and run it; ``overrides`` replace Scenario
-    fields (e.g. ``rounds=20`` for a shortened run)."""
-    if engine not in ENGINES:
-        raise ValueError(
-            f"unknown engine {engine!r}; expected one of {ENGINES}")
+    fields (e.g. ``rounds=20`` for a shortened run).
+
+    ``engine=None`` auto-selects by topology: ``"batched"`` for single-RSU
+    worlds, ``"corridor"`` (the device-resident ``repro.corridor`` engine)
+    for multi-RSU ones.  An explicit engine that cannot run the scenario's
+    topology raises — the old behavior of silently substituting the serial
+    handover loop for whatever was requested is gone.  ``mesh`` /
+    ``record_cohorts`` reach the corridor engine only."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if overrides:
         sc = dataclasses.replace(sc, **overrides)
+    if sc.n_rsus > 1:
+        eng = engine or "corridor"
+        if eng not in CORRIDOR_ENGINES:
+            raise ValueError(
+                f"engine {eng!r} cannot run multi-RSU scenario "
+                f"{sc.name!r} (n_rsus={sc.n_rsus}); corridor scenarios "
+                f"accept {CORRIDOR_ENGINES}")
+    else:
+        eng = engine or "batched"
+        if eng in CORRIDOR_ENGINES and eng not in ENGINES:
+            raise ValueError(
+                f"engine {eng!r} needs a multi-RSU corridor scenario; "
+                f"{sc.name!r} has a single RSU — use one of {ENGINES}")
+        if eng not in ENGINES:
+            raise ValueError(
+                f"unknown engine {eng!r}; expected one of {ENGINES} "
+                f"(single-RSU) or {CORRIDOR_ENGINES} (multi-RSU)")
     veh, te_i, te_l, p = build_world(sc, seed=seed)
     if sc.n_rsus > 1:
-        # the multi-RSU engine processes arrivals one at a time (no wave
-        # batching yet) regardless of the requested single-RSU engine
-        return run_handover_simulation(sc, veh, te_i, te_l, p, seed=seed,
+        if eng == "serial":
+            if mesh is not None or record_cohorts:
+                # no silent substitution: these exist only on the
+                # device-resident engine
+                raise ValueError(
+                    "mesh/record_cohorts require engine='corridor'; the "
+                    "serial reference runs unsharded and keeps no cohort "
+                    "snapshots")
+            return run_handover_simulation(sc, veh, te_i, te_l, p,
+                                           seed=seed, eval_every=eval_every,
+                                           use_kernel=use_kernel,
+                                           progress=progress)
+        return run_corridor_simulation(sc, veh, te_i, te_l, p, seed=seed,
                                        eval_every=eval_every,
+                                       use_kernel=use_kernel, mesh=mesh,
+                                       record_cohorts=record_cohorts,
                                        progress=progress)
     return run_simulation(veh, te_i, te_l, scheme=sc.scheme,
                           rounds=sc.rounds, l_iters=sc.l_iters, lr=sc.lr,
                           params=p, seed=seed, eval_every=eval_every,
-                          engine=engine, progress=progress)
-
-
-class _Corridor:
-    """Vehicle kinematics along an ``n_rsus``-segment road.
-
-    RSU j sits at the center of segment j; a vehicle is served by the RSU
-    whose segment contains it (hard handover at segment edges), wrapping at
-    the corridor ends to keep the population constant (same re-entry
-    convention as the single-RSU :class:`~repro.channel.Mobility`)."""
-
-    def __init__(self, p: ChannelParams, n_rsus: int):
-        self.p = p
-        self.n_rsus = n_rsus
-        self.span = 2 * p.coverage * n_rsus
-        self.centers = np.array(
-            [-self.span / 2 + (j + 0.5) * 2 * p.coverage
-             for j in range(n_rsus)])
-        self.x0 = -self.span / 2 + self.span * (np.arange(p.K) / p.K)
-
-    def x(self, i: int, t: float) -> float:
-        dx = self.x0[i] + self.p.v * t
-        return ((dx + self.span / 2) % self.span) - self.span / 2
-
-    def serving_rsu(self, i: int, t: float) -> int:
-        x = self.x(i, t)
-        j = int((x + self.span / 2) // (2 * self.p.coverage))
-        return min(max(j, 0), self.n_rsus - 1)
-
-    def distance(self, i: int, t: float) -> float:
-        x = self.x(i, t)
-        j = self.serving_rsu(i, t)
-        return float(np.sqrt((x - self.centers[j]) ** 2 +
-                             self.p.d_y ** 2 + self.p.H ** 2))
-
-
-def run_handover_simulation(sc: Scenario, vehicles_data: Sequence,
-                            test_images, test_labels, p: ChannelParams,
-                            *, seed: int = 0, eval_every: int = 10,
-                            interpretation: str = "mixing",
-                            progress=None) -> SimResult:
-    """Multi-RSU MAFL with handover (beyond paper, DESIGN.md §8).
-
-    Each RSU keeps its own cohort model and applies the paper's per-arrival
-    aggregation; a vehicle downloads from the RSU serving it at download
-    time and uploads to the RSU serving it at arrival time.  Every
-    ``sc.reconcile_every`` arrivals all cohort models are averaged — the
-    corridor-scale version of the hierarchical cross-pod reconcile."""
-    import jax
-    from repro.models.cnn import init_cnn
-
-    init = init_cnn(jax.random.PRNGKey(seed))
-    servers = [RSUServer(init, p, scheme=sc.scheme,
-                         interpretation=interpretation)
-               for _ in range(sc.n_rsus)]
-    corridor = _Corridor(p, sc.n_rsus)
-    # same scheduling rules as the single-RSU engine — only the geometry
-    # (distance to the serving RSU) differs
-    timeline = _Timeline(p, seed, distance_fn=corridor.distance)
-    queue = timeline.queue
-    fleet_batch = min(128, min(d.size for d in vehicles_data))
-    clients = [Vehicle(d, lr=sc.lr, batch_size=fleet_batch, seed=seed)
-               for d in vehicles_data]
-
-    def schedule(vehicle: int, t_download: float):
-        rsu = corridor.serving_rsu(vehicle, t_download)
-        timeline.schedule(vehicle, t_download,
-                          payload=servers[rsu].global_params)
-
-    for k in range(p.K):
-        schedule(k, 0.0)
-
-    result = SimResult(scheme=f"{sc.scheme}+handover", rounds=[],
-                       acc_history=[], loss_history=[])
-    total = 0
-    while total < sc.rounds and len(queue):
-        ev = queue.pop()
-        local_params, _ = clients[ev.vehicle].local_update(ev.payload,
-                                                           sc.l_iters)
-        rsu = corridor.serving_rsu(ev.vehicle, ev.time)   # handover target
-        rec = servers[rsu].receive(
-            local_params, time=ev.time, vehicle=ev.vehicle,
-            upload_delay=ev.upload_delay, train_delay=ev.train_delay,
-            download_time=ev.download_time)
-        total += 1
-        consensus = None
-        if total % sc.reconcile_every == 0:
-            consensus = reconcile_models([s.global_params for s in servers])
-            for s in servers:
-                s.global_params = consensus
-        if total % eval_every == 0 or total == sc.rounds:
-            if consensus is None:
-                consensus = reconcile_models(
-                    [s.global_params for s in servers])
-            acc, loss = evaluate(consensus, test_images, test_labels)
-            rec.accuracy, rec.loss = acc, loss
-            result.acc_history.append((total, acc))
-            result.loss_history.append((total, loss))
-            if progress:
-                progress(total, acc)
-        result.rounds.append(rec)
-        schedule(ev.vehicle, ev.time)
-        timeline.prune()
-
-    result.final_params = reconcile_models(
-        [s.global_params for s in servers])
-    return result
+                          use_kernel=use_kernel, engine=eng,
+                          progress=progress)

@@ -26,6 +26,14 @@ class RoundRecord:
     weight: float              # beta_u * beta_l (1.0 for plain AFL)
     loss: Optional[float] = None
     accuracy: Optional[float] = None
+    # serving RSU the upload landed on (multi-RSU corridor engines only)
+    rsu: Optional[int] = None
+
+
+# fedasync's mixing coefficient (alpha = mix * (staleness+1)^-0.5); the
+# device engines (core/jit_engine.py, corridor/engine.py) must mirror the
+# host path, so all of them read this one constant
+DEFAULT_FEDASYNC_MIX = 0.5
 
 
 class RSUServer:
@@ -34,7 +42,8 @@ class RSUServer:
 
     def __init__(self, init_params, params: ChannelParams,
                  scheme: str = "mafl", use_kernel: bool = False,
-                 fedbuff_size: int = 3, fedasync_mix: float = 0.5,
+                 fedbuff_size: int = 3,
+                 fedasync_mix: float = DEFAULT_FEDASYNC_MIX,
                  interpretation: str = "mixing"):
         self.global_params = init_params
         self.p = params

@@ -1,0 +1,552 @@
+"""Device-resident corridor engine: R RSU cohorts, handover, and the cloud
+reconciliation tier in one compiled program (``engine="corridor"``,
+DESIGN.md §10).
+
+The retired serial loop (``corridor.reference``) pays Python dispatch per
+arrival *and* per RSU bookkeeping step, capping corridors at K≈40.  This
+engine extends the mega-fleet layout (DESIGN.md §9) with an RSU axis:
+
+- **Per-RSU slot queues, ``f32[R, K]``.**  The jit engine's per-vehicle
+  slot columns gain a leading RSU axis: vehicle i's single in-flight upload
+  occupies slot ``(j, i)`` where j is the RSU serving it at *arrival* time
+  (positions are pure in t, so the handover target is known at schedule
+  time).  Pop is an argmin over the flattened ``R*K`` time column; a
+  **handover is a vectorized slot migration** — the re-schedule writes
+  ``+inf`` into the old row and the new arrival time into the row of the
+  RSU the vehicle will have reached, moving the slot (and with it the
+  vehicle's download-time/staleness column and in-flight payload pointer)
+  between RSU shards whenever the trajectory crosses a coverage boundary.
+
+- **Cohort stack, ``[R, ...]``.**  The R cohort models are one stacked
+  pytree; an arrival updates exactly one row (dynamic one-row scatter, or a
+  masked local-row update under the ``"rsu"``-sharded mesh path).
+
+- **Snapshot ring: one model per round, exactly.**  Each round re-schedules
+  exactly one vehicle, whose next download reads exactly one cohort — the
+  one its upload just landed on (download happens at the arrival position).
+  So ``ring[r+1]`` stores that single post-round-r cohort row, and
+  ``ring[0]`` is the common init (every cohort starts from the same
+  model).  Payload indexing is therefore identical to the single-RSU jit
+  engine — the RSU choice is already baked into the row — and rows that no
+  later wave reads are dead code to XLA.
+
+- **Reconciliation between scan segments.**  Cloud-tier reconcile rounds
+  (every ``reconcile_every`` arrivals) are statically known, so scan
+  segments are split at those boundaries and the reconcile runs *between*
+  scans at trace level: FedAvg (all cohorts adopt the stack mean) or EMA
+  (each cohort moves ``tau`` toward it, optionally through the Pallas
+  ``weighted_agg`` kernel).  Because the re-download payload of the
+  boundary round must see the *post*-reconcile cohort (the serial
+  reference schedules after reconciling), the boundary's ring row is
+  overwritten with the reconciled row.
+
+- **Optional ``shard_map`` over the RSU axis.**  With a mesh that has an
+  ``"rsu"`` axis (R divisible by its size), the cohort stack is sharded
+  over it for the whole scan segment: the queue columns are replicated
+  (scalar bookkeeping, computed redundantly per device — zero traffic),
+  each arrival updates a cohort row on the owning shard only, and ring
+  rows leave the shards as one psum per segment.  Between reconciliations
+  the cohorts exchange exactly nothing; the reconcile itself is one pmean
+  per leaf — the corridor-scale instance of
+  ``hierarchical.cross_pod_reconcile``.
+
+Local training is wave-hoisted exactly as in the jit engine (same wave
+rule, same shared-payload broadcast fast path, optional ``"data"``-axis
+sharding), and the same host dry-run (``corridor.plan``) plans the program
+and cross-checks the device trace afterwards — vehicle *and* serving-RSU
+divergence raise instead of silently mis-pairing batches or cohorts.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel import ChannelParams, CorridorMobility, slot_gain_table
+from repro.core import client as client_mod
+from repro.core.client import Vehicle, VehicleData
+from repro.core.jit_engine import _mesh_key, _wave_train
+from repro.core.server import DEFAULT_FEDASYNC_MIX, RoundRecord
+from repro.corridor.plan import CorridorPlan, plan_corridor
+from repro.models.cnn import init_cnn
+
+_SUPPORTED_SCHEMES = ("mafl", "afl", "fedasync")
+_RSU_AXIS = "rsu"
+
+_PROGRAM_CACHE: OrderedDict = OrderedDict()
+_PROGRAM_CACHE_SIZE = 16
+
+
+def _rsu_shards(mesh, n_rsus: int) -> int:
+    """Number of RSU shards the mesh requests (1 = unsharded).  A mesh
+    whose ``"rsu"`` axis cannot tile the corridor raises — the caller
+    explicitly asked for RSU sharding, and silently running replicated
+    would misrepresent the measured scaling/memory behavior."""
+    if mesh is None or _RSU_AXIS not in mesh.shape:
+        return 1
+    n = mesh.shape[_RSU_AXIS]
+    if n > 1 and n_rsus % n != 0:
+        raise ValueError(
+            f"mesh '{_RSU_AXIS}' axis of size {n} cannot shard "
+            f"{n_rsus} RSU cohorts (n_rsus must be divisible)")
+    return n if n > 1 else 1
+
+
+def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
+                   interpretation: str, use_kernel: bool, mesh,
+                   reconcile_every: int, reconcile_mode: str,
+                   reconcile_tau: float, eval_rounds: tuple,
+                   fedasync_mix: float, record_cohorts: bool):
+    """Trace-time constants live in the closure; cached per world structure
+    like the jit engine's program."""
+    M = len(plan.veh)
+    K = p.K
+    R = plan.n_rsus
+    d = np.asarray(plan.dl_round)
+    up_rsu = np.asarray(plan.up_rsu)
+    beta = jnp.float32(p.beta)
+    gamma = jnp.float32(p.gamma)
+    zeta = jnp.float32(p.zeta)
+    f_mix = jnp.float32(fedasync_mix)
+    tau = jnp.float32(reconcile_tau if reconcile_mode == "ema" else 1.0)
+    v_c = jnp.float32(p.v)
+    span = jnp.float32(2.0 * p.coverage * R)
+    cell = jnp.float32(2.0 * p.coverage)
+    centers = jnp.asarray(
+        -float(span) / 2 + (np.arange(R) + 0.5) * float(cell), jnp.float32)
+    dy2H2 = jnp.float32(p.d_y ** 2 + p.H ** 2)
+    pm = jnp.float32(p.p_m)
+    alpha_pl = jnp.float32(p.alpha)
+    sigma2 = jnp.float32(p.sigma2)
+    bw = jnp.float32(p.B)
+    bits = jnp.float32(p.model_bits)
+    n_slots = plan.n_slots
+    n_shards = _rsu_shards(mesh, R)
+    Rl = R // n_shards
+
+    if n_shards > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+    def aggregate(g, loc, t, cu, cl, dl_t):
+        """One arrival's cohort update — identical math and f32 arithmetic
+        to the jit engine / host aggregation paths."""
+        if scheme == "mafl":
+            weight = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)   # Eqs. 7, 9
+        else:
+            weight = jnp.float32(1.0)
+        if scheme == "mafl" and interpretation == "literal":
+            if use_kernel:
+                from repro.kernels.weighted_agg import ops as agg_ops
+                return agg_ops.weighted_agg_tree(g, loc, beta, weight), weight
+            new = jax.tree_util.tree_map(
+                lambda a, b: (beta * a.astype(jnp.float32) +
+                              (1.0 - beta) * weight *
+                              b.astype(jnp.float32)).astype(a.dtype), g, loc)
+            return new, weight
+        if scheme == "mafl":
+            alpha = jnp.clip((1.0 - beta) * weight, 0.0, 1.0)
+        elif scheme == "afl":
+            alpha = 1.0 - beta
+        else:                                                   # fedasync
+            stale = jnp.maximum(t - dl_t, 0.0)
+            alpha = f_mix * (stale + 1.0) ** (-0.5)
+        if use_kernel:
+            from repro.kernels.weighted_agg import ops as agg_ops
+            return agg_ops.weighted_agg_tree(g, loc, 1.0 - alpha,
+                                             jnp.float32(1.0)), weight
+        new = jax.tree_util.tree_map(
+            lambda a, b: ((1.0 - alpha) * a.astype(jnp.float32) +
+                          alpha * b.astype(jnp.float32)).astype(a.dtype),
+            g, loc)
+        return new, weight
+
+    def stack_mean(G):
+        """Mean over the (local) cohort rows, f32 accumulate."""
+        return jax.tree_util.tree_map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0), G)
+
+    def mix_rows(G, cons):
+        """EMA of every row toward ``cons`` (tau=1 → adopt outright);
+        ``cons`` arrives in f32 and is cast back to the row dtype."""
+        if use_kernel and float(tau) != 1.0:
+            from repro.kernels.weighted_agg import ops as agg_ops
+            return agg_ops.weighted_agg_tree(
+                G, jax.tree_util.tree_map(
+                    lambda x, c: jnp.broadcast_to(c.astype(x.dtype),
+                                                  x.shape), G, cons),
+                1.0 - tau, jnp.float32(1.0))
+        return jax.tree_util.tree_map(
+            lambda x, c: ((1.0 - tau) * x.astype(jnp.float32) +
+                          tau * c[None]).astype(x.dtype), G, cons)
+
+    def serving(x):
+        j = jnp.floor((x + span / 2.0) / cell).astype(jnp.int32)
+        return jnp.clip(j, 0, R - 1)
+
+    def make_seg_body(locals_buf, gains, x0, qcl, off):
+        def wrap_x(i, t):
+            dx = x0[i] + v_c * t                                # Eq. 3
+            return jnp.mod(dx + span / 2.0, span) - span / 2.0
+
+        # fresh body per scan segment (the lax.scan traced-body cache
+        # pitfall, DESIGN.md §9) — and ``off`` is this shard's first RSU
+        # row (0 when unsharded)
+        def body(carry, r):
+            G, qt, qdl, qcu = carry
+            flat = jnp.argmin(qt)                               # pop
+            j = flat // K
+            i = flat % K
+            t = qt[j, i]
+            cu, cl, dl_t = qcu[i], qcl[i], qdl[i]
+            loc = jax.tree_util.tree_map(lambda B: B[r], locals_buf)
+            owned = (j >= off) & (j < off + Rl)
+            row = jnp.where(owned, j - off, 0)
+            grow = jax.tree_util.tree_map(lambda Gl: Gl[row], G)
+            new_row, weight = aggregate(grow, loc, t, cu, cl, dl_t)
+            G = jax.tree_util.tree_map(
+                lambda Gl, nr: Gl.at[row].set(
+                    jnp.where(owned, nr, Gl[row])), G, new_row)
+            # this shard's contribution to ring[r+1] (exactly one shard
+            # owns the row; psum'd once per segment under the mesh path)
+            contrib = jax.tree_util.tree_map(
+                lambda nr: jnp.where(owned, nr, jnp.zeros_like(nr)),
+                new_row)
+            # re-schedule vehicle i: download now, train C_l, upload C_u
+            t_up = t + cl
+            slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
+            gain = gains[slot, i]
+            x_up = wrap_x(i, t_up)
+            j_up = serving(x_up)                 # serving cell at upload
+            dist = jnp.sqrt((x_up - centers[j_up]) ** 2 + dy2H2)  # Eq. 4
+            snr = pm * gain * dist ** (-alpha_pl) / sigma2
+            rate = bw * jnp.log2(1.0 + snr)                     # Eq. 5
+            cu_new = bits / jnp.maximum(rate, 1e-12)            # Eq. 6
+            t_new = t_up + cu_new
+            j_new = serving(wrap_x(i, t_new))    # handover target
+            # slot migration: leave row j, land in row j_new
+            qt = qt.at[j, i].set(jnp.inf)
+            qt = qt.at[j_new, i].set(t_new)
+            qdl = qdl.at[i].set(t)
+            qcu = qcu.at[i].set(cu_new)
+            return ((G, qt, qdl, qcu),
+                    (i, j, t, cu, cl, dl_t, weight, contrib))
+        return body
+
+    def run_segment(G, qt, qdl, qcu, locals_buf, gains, x0, qcl, a, b):
+        """Consume pops ``a..b-1``; returns updated state, the stacked ring
+        rows for those rounds, and the scalar trace columns."""
+        if n_shards == 1:
+            body = make_seg_body(locals_buf, gains, x0, qcl, 0)
+            carry, ys = jax.lax.scan(body, (G, qt, qdl, qcu),
+                                     jnp.arange(a, b))
+            G, qt, qdl, qcu = carry
+            return G, qt, qdl, qcu, ys[7], ys[:7]
+
+        def seg_fn(G, qt, qdl, qcu, locals_buf, gains, x0, qcl):
+            off = jax.lax.axis_index(_RSU_AXIS) * Rl
+            body = make_seg_body(locals_buf, gains, x0, qcl, off)
+            carry, ys = jax.lax.scan(body, (G, qt, qdl, qcu),
+                                     jnp.arange(a, b))
+            G, qt, qdl, qcu = carry
+            rows = jax.tree_util.tree_map(
+                lambda x: jax.lax.psum(x, _RSU_AXIS), ys[7])
+            return G, qt, qdl, qcu, rows, ys[:7]
+
+        fn = shard_map(
+            seg_fn, mesh=mesh,
+            in_specs=(P(_RSU_AXIS), P(), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(_RSU_AXIS), P(), P(), P(), P(), P()),
+            check_rep=False)
+        return fn(G, qt, qdl, qcu, locals_buf, gains, x0, qcl)
+
+    def reconcile(G):
+        """The cloud tier: FedAvg/EMA of the R cohorts; the only step that
+        touches more than one cohort (one pmean per leaf when sharded)."""
+        if n_shards == 1:
+            return mix_rows(G, stack_mean(G))
+
+        def rec_fn(G):
+            cons = jax.tree_util.tree_map(
+                lambda x: jax.lax.pmean(x, _RSU_AXIS), stack_mean(G))
+            return mix_rows(G, cons)
+
+        return shard_map(rec_fn, mesh=mesh, in_specs=(P(_RSU_AXIS),),
+                         out_specs=P(_RSU_AXIS), check_rep=False)(G)
+
+    def consensus(G):
+        """Corridor-wide model (mean of cohorts) for eval/final params."""
+        if n_shards == 1:
+            return jax.tree_util.tree_map(
+                lambda x, g: x.astype(g.dtype), stack_mean(G),
+                jax.tree_util.tree_map(lambda g: g[0], G))
+
+        def cons_fn(G):
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.pmean(x, _RSU_AXIS), stack_mean(G))
+
+        cons = shard_map(cons_fn, mesh=mesh, in_specs=(P(_RSU_AXIS),),
+                         out_specs=P(), check_rep=False)(G)
+        return jax.tree_util.tree_map(
+            lambda x, g: x.astype(g.dtype), cons,
+            jax.tree_util.tree_map(lambda g: g[0], G))
+
+    def cohort_row(G, j: int):
+        """Row ``j`` of the (possibly sharded) cohort stack, replicated."""
+        if n_shards == 1:
+            return jax.tree_util.tree_map(lambda x: x[j], G)
+
+        def pick(G):
+            mine = jax.lax.axis_index(_RSU_AXIS) == j // Rl
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.psum(
+                    jnp.where(mine, x[j % Rl], jnp.zeros_like(x[j % Rl])),
+                    _RSU_AXIS), G)
+
+        return shard_map(pick, mesh=mesh, in_specs=(P(_RSU_AXIS),),
+                         out_specs=P(), check_rep=False)(G)
+
+    def gather_cohorts(G):
+        """Full [R, ...] stack on every device (cohort snapshots only)."""
+        if n_shards == 1:
+            return G
+
+        def allg(G):
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.all_gather(x, _RSU_AXIS, tiled=True), G)
+
+        return shard_map(allg, mesh=mesh, in_specs=(P(_RSU_AXIS),),
+                         out_specs=P(), check_rep=False)(G)
+
+    eval_set = set(eval_rounds)
+    reconcile_set = {b for b in range(reconcile_every, M + 1,
+                                      reconcile_every)}
+
+    def program(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, lr):
+        local_scan = client_mod._local_scan
+        G = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), w0)
+        if n_shards > 1:
+            G = jax.lax.with_sharding_constraint(
+                G, jax.sharding.NamedSharding(mesh, P(_RSU_AXIS)))
+        locals_buf = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((M,) + x.shape, x.dtype), w0)
+        ring = [w0] + [None] * M       # one model per round (see header)
+        cons_snaps, cohort_snaps, traces = [], [], []
+
+        for T, s, e in plan.waves:
+            T = np.asarray(T, np.int32)
+            if len(T):
+                pay_rounds = [int(x) for x in d[T] + 1]
+                shared = all(pr == pay_rounds[0] for pr in pay_rounds)
+                if shared:
+                    pay = ring[pay_rounds[0]]
+                else:
+                    pay = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs),
+                        *[ring[pr] for pr in pay_rounds])
+                train = _wave_train(local_scan, mesh, len(T), shared)
+                loc, _ = train(pay, imgs[T], labs[T], lr)
+                T_dev = jnp.asarray(T)
+                locals_buf = jax.tree_util.tree_map(
+                    lambda B, L: B.at[T_dev].set(L), locals_buf, loc)
+            # sub-split [s, e) at reconcile/eval boundaries, which are
+            # static — the reconcile and the consensus snapshot run at
+            # trace level *between* scans (no collective under lax.cond)
+            points = sorted({b for b in range(s + 1, e + 1)
+                             if b in eval_set or b in reconcile_set}
+                            | {e})
+            a = s
+            for b in points:
+                if b > a:
+                    G, qt, qdl, qcu, rows, ys = run_segment(
+                        G, qt, qdl, qcu, locals_buf, gains, x0, qcl, a, b)
+                    traces.append(ys)
+                    for r in range(a, b):
+                        ring[r + 1] = jax.tree_util.tree_map(
+                            lambda x, i=r - a: x[i], rows)
+                if b in reconcile_set:
+                    G = reconcile(G)
+                    # the boundary round's re-download happens *after* the
+                    # reconcile (serial reference order) — its ring row is
+                    # the reconciled cohort the upload landed on
+                    ring[b] = cohort_row(G, int(up_rsu[b - 1]))
+                if b in eval_set:
+                    cons_snaps.append(consensus(G))
+                    if record_cohorts:
+                        cohort_snaps.append(gather_cohorts(G))
+                a = b
+
+        trace = tuple(jnp.concatenate([tr[k] for tr in traces])
+                      for k in range(7))
+        return gather_cohorts(G), cons_snaps, cohort_snaps, trace
+
+    return jax.jit(program)
+
+
+# ---------------------------------------------------------------------------
+# public entry point — signature mirrors corridor.reference
+# ---------------------------------------------------------------------------
+def run_corridor_simulation(
+    sc,
+    vehicles_data: Sequence[VehicleData],
+    test_images: np.ndarray,
+    test_labels: np.ndarray,
+    p: Optional[ChannelParams] = None,
+    *,
+    seed: int = 0,
+    eval_every: int = 10,
+    interpretation: str = "mixing",
+    use_kernel: bool = False,
+    progress=None,
+    batch_size: int = 128,
+    mesh=None,
+    record_cohorts: bool = False,
+    init_params=None,
+):
+    """Run ``sc.rounds`` corridor arrivals entirely on device; returns the
+    same ``SimResult`` the serial reference produces (same record fields,
+    same eval cadence, per-RSU round numbering, ``rec.rsu`` set).
+
+    ``result.extras`` carries the corridor-specific outputs: the per-round
+    serving-RSU trace, the final cohort stack, and (``record_cohorts=True``)
+    per-eval-round cohort snapshots for per-RSU accuracy curves.  As with
+    the jit engine, ``progress`` fires post-hoc in round order."""
+    from repro.core.mafl import SimResult, evaluate
+
+    scheme = sc.scheme
+    if scheme not in _SUPPORTED_SCHEMES:
+        raise ValueError(
+            f"engine='corridor' supports schemes {_SUPPORTED_SCHEMES}, not "
+            f"{scheme!r} (fedbuff keeps host-side buffer state — use "
+            "engine='serial')")
+    mode = getattr(sc, "reconcile_mode", "fedavg")
+    if mode not in ("fedavg", "ema"):
+        raise ValueError(f"unknown reconcile_mode {mode!r}; "
+                         "expected 'fedavg' or 'ema'")
+    p = p if p is not None else sc.channel()
+    assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
+    rounds = sc.rounds
+    if rounds < 1:
+        raise ValueError("rounds must be >= 1")
+    R = sc.n_rsus
+    entry = getattr(sc, "corridor_entry", "uniform")
+
+    plan = plan_corridor(p, R, seed, rounds, entry=entry)
+    M = rounds
+    eval_rounds = tuple(sorted({rr for rr in range(1, M + 1)
+                                if rr % eval_every == 0} | {M}))
+
+    key = jax.random.PRNGKey(seed)
+    w0 = init_params if init_params is not None else init_cnn(key)
+
+    # one minibatch stack per consumed round, drawn from the same
+    # per-vehicle RNG streams in the same pop order as the serial
+    # reference, so both engines train identical batches
+    fleet_batch = min(batch_size, min(d.size for d in vehicles_data))
+    clients = [Vehicle(d, lr=sc.lr, batch_size=fleet_batch, seed=seed)
+               for d in vehicles_data]
+    im_list, lab_list = [], []
+    for r in range(M):
+        im, lab = clients[plan.veh[r]].sample_batches(sc.l_iters)
+        im_list.append(im)
+        lab_list.append(lab)
+    imgs = jnp.asarray(np.stack(im_list))
+    labs = jnp.asarray(np.stack(lab_list))
+
+    gains = jnp.asarray(slot_gain_table(p, seed, plan.n_slots), jnp.float32)
+    x0 = jnp.asarray(CorridorMobility(p, R, entry=entry).x0, jnp.float32)
+    qt0 = np.full((R, p.K), np.inf, np.float32)
+    qt0[plan.row0, np.arange(p.K)] = plan.q0["time"]
+    qt = jnp.asarray(qt0)
+    qdl = jnp.asarray(plan.q0["download_time"], jnp.float32)
+    qcu = jnp.asarray(plan.q0["upload_delay"], jnp.float32)
+    qcl = jnp.asarray(plan.q0["train_delay"], jnp.float32)
+
+    shapes = (imgs.shape, tuple(
+        (str(path), v.shape, str(v.dtype))
+        for path, v in jax.tree_util.tree_leaves_with_path(w0)))
+    cache_key = (plan.waves, tuple(plan.dl_round.tolist()),
+                 tuple(plan.up_rsu.tolist()), plan.n_slots, R, p, scheme,
+                 interpretation, use_kernel, mode,
+                 float(getattr(sc, "reconcile_tau", 0.5)),
+                 sc.reconcile_every, eval_rounds, record_cohorts,
+                 _mesh_key(mesh), shapes, client_mod._local_scan)
+    prog = _PROGRAM_CACHE.get(cache_key)
+    if prog is None:
+        prog = _build_program(
+            plan, p, scheme=scheme, interpretation=interpretation,
+            use_kernel=use_kernel, mesh=mesh,
+            reconcile_every=sc.reconcile_every, reconcile_mode=mode,
+            reconcile_tau=float(getattr(sc, "reconcile_tau", 0.5)),
+            eval_rounds=eval_rounds, fedasync_mix=DEFAULT_FEDASYNC_MIX,
+            record_cohorts=record_cohorts)
+        _PROGRAM_CACHE[cache_key] = prog
+        while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
+            _PROGRAM_CACHE.popitem(last=False)
+    else:
+        _PROGRAM_CACHE.move_to_end(cache_key)
+
+    G, cons_snaps, cohort_snaps, trace = prog(
+        w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, jnp.float32(sc.lr))
+    t_veh, t_rsu, t_time, t_cu, t_cl, t_dlt, t_w = (
+        np.asarray(x) for x in trace)
+
+    # divergence guard (mirrors the jit engine): the minibatch stacks and
+    # the cohort/ring pairing were planned on the host — if the device pop
+    # order or serving-cell assignment ever disagreed, fail loudly
+    if not np.array_equal(t_veh, plan.veh):
+        bad = int(np.argmax(t_veh != plan.veh))
+        raise RuntimeError(
+            "corridor engine: device pop order diverged from the host dry "
+            f"run at round {bad} (device vehicle {int(t_veh[bad])}, host "
+            f"{int(plan.veh[bad])}) — f32 time ties are not expected")
+    if not np.array_equal(t_rsu, plan.up_rsu):
+        bad = int(np.argmax(t_rsu != plan.up_rsu))
+        raise RuntimeError(
+            "corridor engine: device serving-RSU assignment diverged from "
+            f"the host dry run at round {bad} (device RSU {int(t_rsu[bad])},"
+            f" host {int(plan.up_rsu[bad])}) — an f32 boundary flip is not "
+            "expected")
+    if not np.allclose(t_time, plan.times, rtol=1e-4, atol=1e-3):
+        bad = int(np.argmax(~np.isclose(t_time, plan.times,
+                                        rtol=1e-4, atol=1e-3)))
+        raise RuntimeError(
+            "corridor engine: device event times diverged from the host "
+            f"dry run at round {bad}: {t_time[bad]} vs {plan.times[bad]}")
+
+    result = SimResult(scheme=f"{scheme}+corridor", rounds=[],
+                       acc_history=[], loss_history=[])
+    per_rsu_round = np.zeros(R, np.int64)
+    eval_idx = {rr: k for k, rr in enumerate(eval_rounds)}
+    for r in range(M):
+        j = int(t_rsu[r])
+        per_rsu_round[j] += 1
+        rec = RoundRecord(round=int(per_rsu_round[j]),
+                          time=float(t_time[r]), vehicle=int(t_veh[r]),
+                          upload_delay=float(t_cu[r]),
+                          train_delay=float(t_cl[r]),
+                          weight=float(t_w[r]), rsu=j)
+        rr = r + 1
+        if rr in eval_idx:
+            acc, loss = evaluate(cons_snaps[eval_idx[rr]], test_images,
+                                 test_labels)
+            rec.accuracy, rec.loss = acc, loss
+            result.acc_history.append((rr, acc))
+            result.loss_history.append((rr, loss))
+            if progress:
+                progress(rr, acc)
+        result.rounds.append(rec)
+    result.final_params = cons_snaps[eval_idx[M]]
+    result.extras = {
+        "n_rsus": R,
+        "up_rsu": t_rsu,
+        "eval_rounds": list(eval_rounds),
+        "final_cohorts": G,
+    }
+    if record_cohorts:
+        result.extras["cohort_snapshots"] = cohort_snaps
+    return result

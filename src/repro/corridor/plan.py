@@ -1,0 +1,105 @@
+"""Host dry-run planner for the corridor engine (DESIGN.md §10).
+
+The event timeline depends only on the channel/mobility/data-size processes,
+never on training (DESIGN.md §3) — with the corridor's serving-cell geometry
+substituted for the single-RSU distance, the same payload-free f64 dry run
+that plans the mega-fleet engine also plans the corridor: pop order, each
+pop's serving RSU, the wave partition, the gain-table height, and the
+initial per-RSU slot placement all come out of one cheap host replay of the
+serial reference's scheduling rules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.channel import ChannelParams, CorridorMobility
+
+
+@dataclass
+class CorridorPlan:
+    """Everything the compiled corridor program needs that training cannot
+    change.  All times are host-reference f64; the device re-derives them in
+    f32 and the engine cross-checks the trace (divergence guard)."""
+    n_rsus: int
+    veh: np.ndarray             # i32[M] vehicle popped at round r
+    cycle: np.ndarray           # i32[M] that vehicle's upload cycle
+    dl_round: np.ndarray        # i32[M] round after which it downloaded (-1 = initial)
+    up_rsu: np.ndarray          # i32[M] serving RSU at arrival (= handover target,
+                                #        = the RSU its re-download reads from)
+    times: np.ndarray           # f64[M] host-reference pop times
+    train_delay: np.ndarray     # f64[M]
+    upload_delay: np.ndarray    # f64[M]
+    download_time: np.ndarray   # f64[M]
+    waves: tuple                # ((train_rounds, seg_start, seg_end), ...)
+    n_slots: int                # gain-table height
+    q0: dict                    # initial per-vehicle slot arrays (by vehicle)
+    row0: np.ndarray            # i32[K] initial RSU row of each vehicle's slot
+
+
+def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
+                  entry: str = "uniform") -> CorridorPlan:
+    """Dry-run ``rounds`` arrivals through the corridor timeline (no
+    payloads, no training) and derive everything static."""
+    from repro.core.mafl import _Timeline
+
+    corridor = CorridorMobility(p, n_rsus, entry=entry)
+    tl = _Timeline(p, seed, distance_fn=corridor.distance)
+    for k in range(p.K):
+        tl.schedule(k, 0.0)
+
+    ev0 = tl.queue.as_struct_arrays()
+    assert len(np.unique(ev0["vehicle"])) == p.K, \
+        "slot queue invariant: one in-flight upload per vehicle"
+    order = np.argsort(ev0["vehicle"])
+    q0 = {k: v[order] for k, v in ev0.items()}
+    # a slot lives in the row of the RSU serving the vehicle at *arrival*
+    # time — known at schedule time because positions are pure in t
+    row0 = np.asarray(corridor.serving_rsu(np.arange(p.K), q0["time"]),
+                      np.int32)
+
+    M = rounds
+    veh = np.empty(M, np.int32)
+    cyc = np.empty(M, np.int32)
+    dlr = np.empty(M, np.int32)
+    ups = np.empty(M, np.int32)
+    times = np.empty(M)
+    c_l = np.empty(M)
+    c_u = np.empty(M)
+    dlt = np.empty(M)
+    last_pop = np.full(p.K, -1, np.int32)
+    for r in range(M):
+        ev = tl.queue.pop()
+        veh[r], cyc[r] = ev.vehicle, ev.cycle
+        dlr[r] = last_pop[ev.vehicle]
+        ups[r] = corridor.serving_rsu(ev.vehicle, ev.time)
+        times[r], c_l[r], c_u[r] = ev.time, ev.train_delay, ev.upload_delay
+        dlt[r] = ev.download_time
+        last_pop[ev.vehicle] = r
+        tl.schedule(ev.vehicle, ev.time)
+        tl.prune()
+
+    # Wave partition — the jit engine's rule verbatim (DESIGN.md §9): a wave
+    # trains every not-yet-trained consumed upload whose payload round has
+    # completed, then the scan segment consumes pops up to the first event
+    # scheduled *during* that segment.  Handover adds nothing here: the
+    # payload of the event consumed at round r is a single ring row (the
+    # cohort its re-download read, see engine), so "payload round completed"
+    # remains the only readiness condition.
+    waves = []
+    trained = np.zeros(M, bool)
+    s = 0
+    while s < M:
+        T = np.where(~trained & (dlr < s))[0]
+        trained[T] = True
+        untrained = np.where(~trained)[0]
+        e = int(untrained[0]) if len(untrained) else M
+        waves.append((tuple(int(x) for x in T), s, e))
+        s = e
+
+    return CorridorPlan(n_rsus=n_rsus, veh=veh, cycle=cyc, dl_round=dlr,
+                        up_rsu=ups, times=times, train_delay=c_l,
+                        upload_delay=c_u, download_time=dlt,
+                        waves=tuple(waves), n_slots=tl.gains.last_slot + 3,
+                        q0=q0, row0=row0)

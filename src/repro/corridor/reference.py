@@ -1,0 +1,112 @@
+"""The serial multi-RSU handover loop — retired to a reference
+implementation (DESIGN.md §10).
+
+This is the original host-Python corridor engine: one heap pop, one local
+update, one cohort aggregation per arrival, with periodic cross-RSU
+reconciliation.  It pays Python dispatch per event, so it caps out around
+K=40 — the device-resident engine (``corridor.engine``) is the production
+path, and this loop survives as the executable specification the
+conformance suite pins that engine against (identical arrival traces,
+allclose models; ``tests/test_engine_conformance.py``).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.channel import ChannelParams, CorridorMobility
+from repro.core.hierarchical import ema_toward, reconcile_models
+
+
+def run_handover_simulation(sc, vehicles_data: Sequence,
+                            test_images, test_labels, p: ChannelParams,
+                            *, seed: int = 0, eval_every: int = 10,
+                            interpretation: str = "mixing",
+                            use_kernel: bool = False,
+                            batch_size: int = 128,
+                            progress=None):
+    """Multi-RSU MAFL with handover (beyond paper, DESIGN.md §8/§10).
+
+    Each RSU keeps its own cohort model and applies the paper's per-arrival
+    aggregation; a vehicle downloads from the RSU serving its position at
+    download time and uploads to the RSU serving it at arrival time.  Every
+    ``sc.reconcile_every`` arrivals the cohort models are reconciled — the
+    corridor-scale version of the hierarchical cross-pod reconcile, FedAvg
+    (``sc.reconcile_mode == "fedavg"``: all cohorts adopt the mean) or EMA
+    (``"ema"``: each cohort moves ``sc.reconcile_tau`` toward the mean).
+
+    ``sc`` is any object with the Scenario fields this reads (scheme,
+    rounds, l_iters, lr, n_rsus, reconcile_every, reconcile_mode,
+    reconcile_tau, corridor_entry)."""
+    import jax
+
+    from repro.core.client import Vehicle
+    from repro.core.mafl import SimResult, _Timeline, evaluate
+    from repro.core.server import RSUServer
+    from repro.models.cnn import init_cnn
+
+    mode = getattr(sc, "reconcile_mode", "fedavg")
+    tau = getattr(sc, "reconcile_tau", 0.5)
+    entry = getattr(sc, "corridor_entry", "uniform")
+
+    init = init_cnn(jax.random.PRNGKey(seed))
+    servers = [RSUServer(init, p, scheme=sc.scheme, use_kernel=use_kernel,
+                         interpretation=interpretation)
+               for _ in range(sc.n_rsus)]
+    corridor = CorridorMobility(p, sc.n_rsus, entry=entry)
+    # same scheduling rules as the single-RSU engine — only the geometry
+    # (distance to the serving RSU) differs
+    timeline = _Timeline(p, seed, distance_fn=corridor.distance)
+    queue = timeline.queue
+    fleet_batch = min(batch_size, min(d.size for d in vehicles_data))
+    clients = [Vehicle(d, lr=sc.lr, batch_size=fleet_batch, seed=seed)
+               for d in vehicles_data]
+
+    def schedule(vehicle: int, t_download: float):
+        rsu = int(corridor.serving_rsu(vehicle, t_download))
+        timeline.schedule(vehicle, t_download,
+                          payload=servers[rsu].global_params)
+
+    for k in range(p.K):
+        schedule(k, 0.0)
+
+    result = SimResult(scheme=f"{sc.scheme}+handover", rounds=[],
+                       acc_history=[], loss_history=[])
+    total = 0
+    while total < sc.rounds and len(queue):
+        ev = queue.pop()
+        local_params, _ = clients[ev.vehicle].local_update(ev.payload,
+                                                           sc.l_iters)
+        rsu = int(corridor.serving_rsu(ev.vehicle, ev.time))  # handover target
+        rec = servers[rsu].receive(
+            local_params, time=ev.time, vehicle=ev.vehicle,
+            upload_delay=ev.upload_delay, train_delay=ev.train_delay,
+            download_time=ev.download_time)
+        rec.rsu = rsu
+        total += 1
+        consensus = None
+        if total % sc.reconcile_every == 0:
+            consensus = reconcile_models([s.global_params for s in servers])
+            if mode == "ema":
+                for s in servers:
+                    s.global_params = ema_toward(s.global_params, consensus,
+                                                 tau)
+            else:
+                for s in servers:
+                    s.global_params = consensus
+        if total % eval_every == 0 or total == sc.rounds:
+            if consensus is None or mode == "ema":
+                consensus = reconcile_models(
+                    [s.global_params for s in servers])
+            acc, loss = evaluate(consensus, test_images, test_labels)
+            rec.accuracy, rec.loss = acc, loss
+            result.acc_history.append((total, acc))
+            result.loss_history.append((total, loss))
+            if progress:
+                progress(total, acc)
+        result.rounds.append(rec)
+        schedule(ev.vehicle, ev.time)
+        timeline.prune()
+
+    result.final_params = reconcile_models(
+        [s.global_params for s in servers])
+    return result

@@ -209,3 +209,83 @@ def test_jit_rejects_fedbuff():
     world = _world(2, 0.015, 0.95)
     with pytest.raises(ValueError, match="fedbuff"):
         _run(world, "jit", 3, scheme="fedbuff")
+
+
+# ---------------------------------------------------------------------------
+# corridor conformance: serial handover reference vs engine="corridor"
+# (DESIGN.md §10) — identical event traces, allclose final models
+# ---------------------------------------------------------------------------
+def _assert_corridor_conformant(ref, res, param_atol=1e-5):
+    assert res.scheme.endswith("+corridor")
+    # identical arrival traces: (per-RSU round, vehicle, serving RSU)
+    assert ([(r.round, r.vehicle, r.rsu) for r in res.rounds]
+            == [(r.round, r.vehicle, r.rsu) for r in ref.rounds]), \
+        "corridor: arrival sequence diverged"
+    np.testing.assert_allclose([r.time for r in res.rounds],
+                               [r.time for r in ref.rounds],
+                               rtol=2e-5, atol=1e-3,
+                               err_msg="corridor: event times")
+    np.testing.assert_allclose([r.weight for r in res.rounds],
+                               [r.weight for r in ref.rounds],
+                               rtol=1e-4, atol=1e-4,
+                               err_msg="corridor: delay weights")
+    assert [rd for rd, _ in res.acc_history] == \
+           [rd for rd, _ in ref.acc_history]
+    for x, y in zip(jax.tree_util.tree_leaves(ref.final_params),
+                    jax.tree_util.tree_leaves(res.final_params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=param_atol,
+                                   err_msg="corridor: final params")
+
+
+def _corridor_pair(name, param_atol=1e-5, **kw):
+    from repro.core.scenarios import run_scenario
+    ref = run_scenario(name, engine="serial", seed=0, **kw)
+    res = run_scenario(name, engine="corridor", seed=0, **kw)
+    _assert_corridor_conformant(ref, res, param_atol=param_atol)
+    return ref, res
+
+
+def test_corridor_conforms_highway_k40(stub_trainer):
+    """The acceptance world: engine='corridor' reproduces the serial
+    handover trace exactly on highway-k40-handover."""
+    ref, res = _corridor_pair("highway-k40-handover", rounds=12,
+                              eval_every=6, l_iters=1)
+    # handover actually exercised: uploads land on several RSUs
+    assert len({r.rsu for r in ref.rounds}) > 1
+
+
+def test_corridor_conforms_r4_k400(stub_trainer):
+    """Conformance-sized mega-corridor world (400 vehicles, 4 RSUs)."""
+    _corridor_pair("corridor-r4-k400", rounds=10, eval_every=5)
+
+
+def test_corridor_conforms_ema_mode(stub_trainer):
+    """EMA cloud tier: cohorts keep identity between reconciliations on
+    both engines."""
+    _corridor_pair("corridor-quick-r2-k8", rounds=8, eval_every=4,
+                   reconcile_mode="ema", reconcile_tau=0.3)
+
+
+def test_corridor_conforms_afl_fedasync(stub_trainer):
+    for scheme in ("afl", "fedasync"):
+        _corridor_pair("corridor-quick-r2-k8", rounds=6, eval_every=6,
+                       scheme=scheme)
+
+
+def test_corridor_real_cnn_small_world_conforms():
+    """Un-stubbed end-to-end corridor conformance: real CNN training
+    through both engines, accuracy histories equal."""
+    ref, res = _corridor_pair("corridor-quick-r2-k8", rounds=6,
+                              eval_every=3, param_atol=2e-3)
+    np.testing.assert_allclose([a for _, a in res.acc_history],
+                               [a for _, a in ref.acc_history], atol=0.05)
+
+
+@pytest.mark.slow
+def test_corridor_real_cnn_rush_hour_conforms():
+    """Rush-hour entry profile (platoon bursts at the west end) through
+    a shrunken r2 world, un-stubbed."""
+    _corridor_pair("corridor-quick-r2-k8", rounds=8, eval_every=4,
+                   corridor_entry="rush", param_atol=5e-3,
+                   channel_overrides=(("platoon", 4),))

@@ -12,6 +12,14 @@ import pytest
 
 from repro.core.hierarchical import pod_local_mafl, reconcile_models
 
+# Environment for the forced-host-device subprocesses.  JAX_PLATFORMS=cpu
+# is load-bearing: this container carries libtpu, and without the pin jax's
+# device init blocks for minutes probing for a TPU before falling back —
+# which is a subprocess-timeout, not a test failure, and wastes the whole
+# slow-lane budget.  /usr/local/bin on PATH matches the interpreter.
+SUBPROC_ENV = {"PYTHONPATH": "src", "PATH": "/usr/local/bin:/usr/bin:/bin",
+               "JAX_PLATFORMS": "cpu"}
+
 
 def test_reconcile_models_is_mean_of_cohorts():
     models = [{"w": jnp.full((3,), float(v))} for v in (1.0, 2.0, 6.0)]
@@ -45,20 +53,56 @@ def test_cross_pod_reconcile_on_multidevice_mesh():
         arr = jnp.concatenate([jnp.ones((2, 4)), jnp.full((2, 4), 3.0)])
         sharded = jax.device_put(arr,
                                  NamedSharding(mesh, P(("pod", "data"))))
-        with jax.set_mesh(mesh):
-            rec = cross_pod_reconcile({"w": sharded}, mesh)
+        # mesh is passed explicitly throughout (jax.set_mesh no longer
+        # exists in this jax version)
+        rec = cross_pod_reconcile({"w": sharded}, mesh)
         np.testing.assert_allclose(np.asarray(rec["w"]), 2.0)
 
         # a full round with reconcile_every=1 must also average
-        with jax.set_mesh(mesh):
-            round_fn = make_hierarchical_round(mesh, beta=0.5,
-                                               reconcile_every=1)
-            out = jax.jit(round_fn)(jnp.int32(0), {"w": sharded},
-                                    {"w": sharded}, jnp.float32(1.0))
+        round_fn = make_hierarchical_round(mesh, beta=0.5,
+                                           reconcile_every=1)
+        out = jax.jit(round_fn)(jnp.int32(0), {"w": sharded},
+                                {"w": sharded}, jnp.float32(1.0))
         np.testing.assert_allclose(np.asarray(out["w"]), 2.0)
         print("HIERARCHICAL_OK")
     """)
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         text=True, timeout=300, env=SUBPROC_ENV)
     assert "HIERARCHICAL_OK" in res.stdout, res.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_cross_pod_reconcile_eight_devices_ema():
+    """Eight forced host devices, one pod axis: FedAvg equals the mean of
+    the eight per-pod cohorts, EMA (tau<1) lands each pod's model at the
+    right intermediate, and the kernel-routed EMA agrees (corridor cloud
+    tier, DESIGN.md §10)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.hierarchical import cross_pod_reconcile
+
+        mesh = jax.make_mesh((8,), ("pod",))
+        # pod j holds the constant model j (leaf rows sharded over pod)
+        arr = jnp.repeat(jnp.arange(8.0)[:, None], 256, axis=1)
+        sharded = jax.device_put(arr, NamedSharding(mesh, P("pod")))
+        spec = P("pod")
+        rec = cross_pod_reconcile({"w": sharded}, mesh, shard_spec=spec)
+        ema = cross_pod_reconcile({"w": sharded}, mesh, shard_spec=spec,
+                                  tau=0.5)
+        emak = cross_pod_reconcile({"w": sharded}, mesh, shard_spec=spec,
+                                   tau=0.5, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(rec["w"]), 3.5)
+        want = 0.5 * np.arange(8.0)[:, None] + 0.5 * 3.5
+        np.testing.assert_allclose(np.asarray(ema["w"]),
+                                   np.broadcast_to(want, (8, 256)))
+        np.testing.assert_allclose(np.asarray(emak["w"]),
+                                   np.asarray(ema["w"]), atol=1e-6)
+        print("HIERARCHICAL8_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300, env=SUBPROC_ENV)
+    assert "HIERARCHICAL8_OK" in res.stdout, res.stderr[-2000:]

@@ -14,10 +14,19 @@ def test_registry_contents():
     names = list_scenarios()
     assert "paper-k10" in names and "fleet-k100" in names
     assert "highway-k40-handover" in names
+    for name in ("corridor-quick-r2-k8", "corridor-r4-k400",
+                 "corridor-r8-k4000", "corridor-rush-hour-r8-k4000"):
+        assert name in names
     with pytest.raises(KeyError, match="unknown scenario"):
         get_scenario("nope")
     with pytest.raises(ValueError, match="duplicate"):
         register(get_scenario("paper-k10"))
+
+
+def test_corridor_scenarios_dwarf_the_fleet():
+    sc = get_scenario("corridor-r8-k4000")
+    assert sc.K == 4000 and sc.n_rsus == 8
+    assert sc.K > 4 * get_scenario("fleet-k1000").K - 1
 
 
 def test_paper_world_matches_table_one():
@@ -100,10 +109,17 @@ def test_corridor_handover_geometry():
 
 @pytest.mark.slow
 def test_handover_scenario_runs():
+    # default engine for multi-RSU worlds is now the device-resident
+    # corridor engine; the retired serial loop stays reachable by name
     r = run_scenario("highway-k40-handover", rounds=16, eval_every=8)
     assert len(r.rounds) == 16
-    assert r.scheme == "mafl+handover"
+    assert r.scheme == "mafl+corridor"
     assert all(np.isfinite(a) for _, a in r.acc_history)
+    rs = run_scenario("highway-k40-handover", rounds=16, eval_every=8,
+                      engine="serial")
+    assert rs.scheme == "mafl+handover"
+    assert [(x.vehicle, x.rsu) for x in rs.rounds] == \
+           [(x.vehicle, x.rsu) for x in r.rounds]
 
 
 @pytest.mark.slow
