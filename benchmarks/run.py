@@ -14,6 +14,10 @@
                BENCH_corridor.json (DESIGN.md §10): serial reference vs
                engine='corridor' at r4-k400 direct + r8-k4000;
                QUICK=1 smokes corridor-quick-r2-k8
+  selection  — admission-policy comparison -> BENCH_selection.json
+               (DESIGN.md §11): admit-all vs weighted-topk vs budget
+               ms/round on fleet-k1000 at equal rounds; QUICK=1 smokes
+               quick-k5 with topk through serial/batched/jit
 
 ``python -m benchmarks.run``            runs everything (QUICK=1 shrinks the
 simulation rounds for CI-speed smoke runs).
@@ -74,6 +78,13 @@ def main() -> None:
         corridor_bench.run(quick=quick, **kw)
         return
 
+    if which == "selection":
+        from benchmarks import selection_bench
+        argv = sys.argv[2:]
+        kw = {"rounds": int(argv[0])} if argv else {}
+        selection_bench.run(quick=quick, **kw)
+        return
+
     if which in ("all", "kernels"):
         print("== kernel microbenchmarks ==")
         from benchmarks import kernel_micro
@@ -108,6 +119,11 @@ def main() -> None:
         print("\n== Corridor engine comparison ==")
         from benchmarks import corridor_bench
         corridor_bench.run(quick=quick)
+
+    if which == "all":
+        print("\n== Selection policy comparison ==")
+        from benchmarks import selection_bench
+        selection_bench.run(quick=quick)
 
     print(f"\ntotal {time.time() - t0:.0f}s")
 

@@ -1,0 +1,120 @@
+"""Vehicle-selection benchmark (ISSUE 4 acceptance artifact).
+
+Measures the device-resident ``engine="jit"`` mega-fleet under each
+admission policy at *equal rounds* on the identical ``fleet-k1000`` world,
+writing ``benchmarks/results/BENCH_selection.json`` with ms/round, final
+accuracy, and simulated completion time per policy.
+
+Honest note on what moves and what doesn't (recorded in DESIGN.md §11):
+the engines already train **only consumed uploads** (the PR-1 dry-run
+consumed-set), so at rounds << K selection cannot shrink the training work
+below one local update per round — wall-clock ms/round stays roughly flat
+(compile time does drop with the admitted fleet).  Selection's measured
+wins are the sequel papers' claims instead: higher accuracy at equal
+rounds (the admitted fleet carries more data/compute) and much lower
+*simulated* time-to-round (admitted vehicles have shorter delays).
+
+``python -m benchmarks.run selection [rounds]``; QUICK=1 swaps in
+``quick-k5`` through serial/batched/jit with weighted-topk (the CI smoke
+artifact, which also proves the cross-engine selection path end-to-end).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import save_result
+from repro.core.mafl import run_simulation
+from repro.core.scenarios import build_world, get_scenario
+from repro.selection import SelectionSpec
+
+POLICIES = {
+    "admit-all": None,
+    "weighted-topk": SelectionSpec(policy="weighted-topk", k=250),
+    "budget": SelectionSpec(policy="budget", budget=0.5),
+}
+
+
+def _timed(world, sc, engine, rounds, selection, seed=0):
+    veh, te_i, te_l, p = world
+    t0 = time.perf_counter()
+    r = run_simulation(veh, te_i, te_l, scheme=sc.scheme, rounds=rounds,
+                       l_iters=sc.l_iters, lr=sc.lr, params=p, seed=seed,
+                       eval_every=rounds, engine=engine, selection=selection)
+    return time.perf_counter() - t0, r
+
+
+def _bench(world, sc, engine, rounds, selection):
+    cold, r = _timed(world, sc, engine, rounds, selection)
+    warm, r = _timed(world, sc, engine, rounds, selection)
+    admitted = (r.extras["selection"]["n_admitted_final"]
+                if selection is not None else sc.K)
+    return {
+        "cold_s": round(cold, 3),
+        "warm_s": round(warm, 3),
+        "cold_ms_per_round": round(cold * 1e3 / rounds, 2),
+        "warm_ms_per_round": round(warm * 1e3 / rounds, 2),
+        "final_accuracy": float(r.final_accuracy()),
+        "n_admitted": int(admitted),
+        # simulated seconds until the last consumed arrival — selection
+        # admits low-delay vehicles, so equal rounds complete far sooner
+        # on the simulated clock
+        "simulated_final_time_s": round(float(r.rounds[-1].time), 3),
+    }
+
+
+def run(rounds: int | None = None, quick: bool = False) -> dict:
+    scenario = "quick-k5" if quick else "fleet-k1000"
+    sc = get_scenario(scenario)
+    rounds = rounds or (8 if quick else sc.rounds)
+    print(f"building {scenario} (K={sc.K}) ...")
+    world = build_world(sc, seed=0)
+
+    payload = {"scenario": scenario, "K": sc.K, "rounds": rounds,
+               "l_iters": sc.l_iters, "policies": {}}
+
+    if quick:
+        # CI smoke: the same small world with topk through all three
+        # single-RSU engines — proves the cross-engine selection path
+        spec = SelectionSpec(policy="weighted-topk", k=3)
+        for engine in ("serial", "batched", "jit"):
+            stats = _bench(world, sc, engine, rounds, spec)
+            payload["policies"][f"weighted-topk/{engine}"] = stats
+            print(f"  topk/{engine:8s}: warm {stats['warm_s']:6.2f}s "
+                  f"({stats['warm_ms_per_round']:.1f} ms/round, "
+                  f"{stats['n_admitted']} admitted)")
+        stats = _bench(world, sc, "jit", rounds, None)
+        payload["policies"]["admit-all/jit"] = stats
+        print(f"  all /jit     : warm {stats['warm_s']:6.2f}s "
+              f"({stats['warm_ms_per_round']:.1f} ms/round)")
+    else:
+        for name, spec in POLICIES.items():
+            stats = _bench(world, sc, "jit", rounds, spec)
+            payload["policies"][name] = stats
+            print(f"  {name:13s}: cold {stats['cold_s']:7.1f}s  warm "
+                  f"{stats['warm_s']:7.1f}s  "
+                  f"({stats['warm_ms_per_round']:.1f} ms/round, "
+                  f"{stats['n_admitted']}/{sc.K} admitted, final acc "
+                  f"{stats['final_accuracy']:.3f}, simulated "
+                  f"{stats['simulated_final_time_s']:.1f}s)")
+        base = payload["policies"]["admit-all"]
+        for name in ("weighted-topk", "budget"):
+            st = payload["policies"][name]
+            key = name.replace("-", "_")
+            payload[f"speedup_{key}"] = round(
+                base["warm_ms_per_round"] / st["warm_ms_per_round"], 2)
+            payload[f"simulated_speedup_{key}"] = round(
+                base["simulated_final_time_s"]
+                / st["simulated_final_time_s"], 2)
+            payload[f"accuracy_delta_{key}"] = round(
+                st["final_accuracy"] - base["final_accuracy"], 4)
+        print(f"  vs admit-all: topk {payload['speedup_weighted_topk']}x "
+              f"wall / {payload['simulated_speedup_weighted_topk']}x "
+              f"simulated / {payload['accuracy_delta_weighted_topk']:+.3f} "
+              f"acc; budget {payload['speedup_budget']}x wall / "
+              f"{payload['simulated_speedup_budget']}x simulated / "
+              f"{payload['accuracy_delta_budget']:+.3f} acc")
+
+    path = save_result("BENCH_selection_quick" if quick
+                       else "BENCH_selection", payload)
+    print(f"wrote {path}")
+    return payload

@@ -1,0 +1,66 @@
+"""Vehicle-selection policy comparison (DESIGN.md §11).
+
+Runs the same fleet world under each admission policy — the paper's
+admit-everyone baseline, score-based top-k (arXiv:2304.02832's
+data x compute x residence ingredients), upload-airtime budget
+(arXiv:2210.15496), and the epsilon-greedy bandit — through the
+device-resident jit engine, and prints the accuracy / wall-clock /
+admitted-fleet table that EXPERIMENTS.md records.
+
+    PYTHONPATH=src python examples/selection.py                # fleet-k100
+    PYTHONPATH=src python examples/selection.py fleet-k1000 30
+"""
+import sys
+import time
+
+from repro.core import run_simulation
+from repro.core.scenarios import build_world, get_scenario
+from repro.selection import SelectionSpec
+
+
+def policies_for(K: int):
+    k = max(1, K // 4)
+    return {
+        "admit-all": None,
+        "weighted-topk": SelectionSpec(policy="weighted-topk", k=k),
+        "budget": SelectionSpec(policy="budget", budget=0.002 * K / 4),
+        "eps-bandit": SelectionSpec(policy="eps-bandit", k=k, eps=0.1,
+                                    resel_every=10),
+    }
+
+
+def main():
+    name = sys.argv[1] if len(sys.argv) > 1 else "fleet-k100"
+    sc = get_scenario(name)
+    rounds = int(sys.argv[2]) if len(sys.argv) > 2 else min(sc.rounds, 40)
+    vehicles, te_i, te_l, p = build_world(sc, seed=0)
+    print(f"{name}: K={p.K}, {rounds} rounds, l={sc.l_iters} — comparing "
+          "admission policies on the jit engine\n")
+
+    rows = []
+    for pname, spec in policies_for(p.K).items():
+        t0 = time.time()
+        r = run_simulation(vehicles, te_i, te_l, scheme=sc.scheme,
+                           rounds=rounds, l_iters=sc.l_iters, lr=sc.lr,
+                           params=p, seed=0, eval_every=rounds,
+                           engine="jit", selection=spec)
+        dt = time.time() - t0
+        admitted = (r.extras["selection"]["n_admitted_final"]
+                    if spec is not None else p.K)
+        rows.append((pname, admitted, r.final_accuracy(),
+                     dt * 1e3 / rounds))
+
+    print(f"{'policy':<15s} {'admitted':>8s} {'final acc':>9s} "
+          f"{'ms/round':>9s}")
+    for pname, admitted, acc, ms in rows:
+        print(f"{pname:<15s} {admitted:>8d} {acc:>9.3f} {ms:>9.1f}")
+
+    base = rows[0]
+    best = max(rows[1:], key=lambda r: r[2])
+    print(f"\nbest selective policy: {best[0]} "
+          f"({best[2]:.3f} vs admit-all {base[2]:.3f}, "
+          f"{base[3] / best[3]:.1f}x faster per round)")
+
+
+if __name__ == "__main__":
+    main()

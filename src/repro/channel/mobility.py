@@ -46,6 +46,27 @@ class Mobility:
         ref = np.array([0.0, 0.0, self.p.H])
         return float(np.linalg.norm(pos - ref))
 
+    def distances(self, t) -> np.ndarray:
+        """All K distances to the RSU at time(s) ``t`` (vectorized Eq. 4,
+        same wrap as :meth:`position`).  The selection layer scores whole
+        fleets at one decision instant, so it reads this instead of K
+        scalar :meth:`distance` calls."""
+        span = 2 * self.p.coverage
+        dx = self.x0 + self.p.v * np.asarray(t)
+        dx = ((dx + self.p.coverage) % span) - self.p.coverage
+        return np.sqrt(dx ** 2 + self.p.d_y ** 2 + self.p.H ** 2)
+
+    def next_boundary_crossing(self, i, t):
+        """Earliest time ``> t`` at which vehicle ``i`` reaches the coverage
+        edge (= its wrap-around re-entry).  Broadcasts — the single-RSU
+        counterpart of :meth:`CorridorMobility.next_boundary_crossing`, so
+        the selection layer's predicted-residence-time feature reads one
+        interface on either geometry."""
+        span = 2 * self.p.coverage
+        dx = self.x0[np.asarray(i)] + self.p.v * np.asarray(t)
+        into = (dx + self.p.coverage) % span
+        return np.asarray(t) + (span - into) / self.p.v
+
 
 class CorridorMobility:
     """Vehicle kinematics along an ``n_rsus``-segment highway corridor.
@@ -107,6 +128,11 @@ class CorridorMobility:
         j = self.serving_rsu(i, t)
         return np.sqrt((x - self.centers[j]) ** 2
                        + self.p.d_y ** 2 + self.p.H ** 2)
+
+    def distances(self, t) -> np.ndarray:
+        """All K distances to each vehicle's serving RSU at time(s) ``t``
+        (the corridor counterpart of :meth:`Mobility.distances`)."""
+        return self.distance(np.arange(self.p.K), t)
 
     def positions(self, t):
         """All K corridor positions at time(s) ``t``: shape ``[K]`` (or

@@ -3,6 +3,7 @@ and training driver state.  Path-keyed so any nested-dict pytree round-trips
 exactly (arrays only; scalars stored as 0-d arrays)."""
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -12,6 +13,21 @@ import jax
 import numpy as np
 
 _SEP = "/"
+
+
+def tree_digest(tree: Any) -> str:
+    """sha256 over a pytree's (path, raw bytes) stream — a bitwise identity
+    for model parameters.  The golden-trace suite pins engine outputs with
+    this, and checkpoint round-trip tests use it to prove bit-exactness."""
+    h = hashlib.sha256()
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        arr = np.asarray(leaf)
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:

@@ -60,11 +60,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.channel import ChannelParams, Mobility, slot_gain_table
+from repro.channel import (ChannelParams, Mobility, slot_gain_table,
+                           training_delay)
 from repro.core import client as client_mod
 from repro.core.client import Vehicle, VehicleData
 from repro.core.server import DEFAULT_FEDASYNC_MIX, RoundRecord
 from repro.models.cnn import init_cnn
+from repro.selection import make_selection_state
 
 _SUPPORTED_SCHEMES = ("mafl", "afl", "fedasync")
 
@@ -84,22 +86,42 @@ class FleetPlan:
     waves: tuple                # ((train_rounds, seg_start, seg_end), ...)
     n_slots: int                # gain-table height
     q0: dict                    # initial per-vehicle slot arrays
+    sel: object = None          # SelectionPlan (DESIGN.md §11) or None
+    sel_bandit: object = None   # (rew_sum f64[K], rew_cnt f64[K]) or None
 
 
-def plan_fleet(p: ChannelParams, seed: int, rounds: int) -> FleetPlan:
+def plan_fleet(p: ChannelParams, seed: int, rounds: int,
+               selection=None) -> FleetPlan:
     """Dry-run ``rounds`` arrivals (no payloads, no training) and derive the
-    pop order, the wave partition, and the initial queue slots."""
+    pop order, the wave partition, and the initial queue slots.  With a
+    selection policy the replay drives a :class:`SelectionState`, so the
+    admission masks, re-admission schedule, and (bandit) expected reward
+    accumulators come out as static plan data."""
     from repro.core.mafl import _Timeline
 
+    sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
     tl = _Timeline(p, seed)
-    for k in range(p.K):
+    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
         tl.schedule(k, 0.0)
 
     ev0 = tl.queue.as_struct_arrays()
-    assert len(np.unique(ev0["vehicle"])) == p.K, \
-        "slot queue invariant: one in-flight upload per vehicle"
-    order = np.argsort(ev0["vehicle"])
-    q0 = {k: v[order] for k, v in ev0.items()}
+    if sel is None:
+        assert len(np.unique(ev0["vehicle"])) == p.K, \
+            "slot queue invariant: one in-flight upload per vehicle"
+    # full-K slot arrays; parked vehicles hold +inf (never popped) until a
+    # re-admission boundary writes them a live slot.  train_delay comes from
+    # Eq. 8 directly — bit-identical to the event values, and defined for
+    # parked vehicles too (the in-program re-admission needs it).
+    q0 = {
+        "time": np.full(p.K, np.inf),
+        "download_time": np.zeros(p.K),
+        "upload_delay": np.zeros(p.K),
+        "train_delay": np.array(
+            [training_delay(p, i) for i in range(1, p.K + 1)]),
+    }
+    q0["time"][ev0["vehicle"]] = ev0["time"]
+    q0["download_time"][ev0["vehicle"]] = ev0["download_time"]
+    q0["upload_delay"][ev0["vehicle"]] = ev0["upload_delay"]
 
     M = rounds
     veh = np.empty(M, np.int32)
@@ -117,7 +139,17 @@ def plan_fleet(p: ChannelParams, seed: int, rounds: int) -> FleetPlan:
         times[r], c_l[r], c_u[r] = ev.time, ev.train_delay, ev.upload_delay
         dlt[r] = ev.download_time
         last_pop[ev.vehicle] = r
-        tl.schedule(ev.vehicle, ev.time)
+        if sel is None:
+            tl.schedule(ev.vehicle, ev.time)
+        else:
+            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
+                tl.schedule(ev.vehicle, ev.time)
+            for v in sel.maybe_reselect(r + 1, ev.time):
+                # a re-admitted vehicle downloads the post-round-r model,
+                # so its next pop's payload is ring[r+1] — same indexing
+                # rule as an ordinary re-download
+                tl.schedule(v, ev.time)
+                last_pop[v] = r
         tl.prune()
 
     # Wave partition — identical to the batched engine's rule: a wave trains
@@ -138,7 +170,9 @@ def plan_fleet(p: ChannelParams, seed: int, rounds: int) -> FleetPlan:
     return FleetPlan(veh=veh, cycle=cyc, dl_round=dlr, times=times,
                      train_delay=c_l, upload_delay=c_u, download_time=dlt,
                      waves=tuple(waves), n_slots=tl.gains.last_slot + 3,
-                     q0=q0)
+                     q0=q0, sel=None if sel is None else sel.plan(),
+                     sel_bandit=None if sel is None
+                     else sel.bandit_expectation())
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +235,24 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
     bits = jnp.float32(p.model_bits)
     n_slots = plan.n_slots
 
+    # selection (DESIGN.md §11): admission is static plan data folded into
+    # the compiled program — a [M, K] mask table gates every re-schedule
+    # (an unadmitted vehicle's slot gets +inf, so the argmin pop can never
+    # pick it and it occupies no wave), and boundary re-admissions run at
+    # trace level between scan sub-segments.  Only the eps-bandit carries
+    # live state (f32 reward accumulators) through the scan — its decisions
+    # still come from the host f64 replay; the accumulators exist so the
+    # divergence guard can prove the device saw the same reward stream.
+    sel_active = plan.sel is not None and not plan.sel.is_noop
+    with_state = sel_active and plan.sel.spec.policy == "eps-bandit"
+    if sel_active:
+        adm_tab = jnp.asarray(
+            np.stack([plan.sel.mask_for_round(r) for r in range(M)]))
+        readmit_at = {b: np.asarray(n, np.int32)
+                      for b, n, _ in plan.sel.boundaries if len(n)}
+    else:
+        readmit_at = {}
+
     def aggregate(g, loc, t, cu, cl, dl_t):
         """One arrival's update — mirrors the host paths bit-for-bit in
         formula and f32 arithmetic (aggregation.mix_update_donated /
@@ -242,6 +294,10 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
         locals_buf = jax.tree_util.tree_map(
             lambda x: jnp.zeros((M,) + x.shape, x.dtype), w0)
         g = w0
+        rs = rc = None
+        if with_state:
+            rs = jnp.zeros(K, jnp.float32)
+            rc = jnp.zeros(K, jnp.float32)
         traces = []
 
         def make_seg_body(locals_buf):
@@ -252,13 +308,22 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
             # capture of ``locals_buf`` and aggregates zeros for every
             # later wave.
             def seg_body(carry, r):
-                g, ring, qt, qdl, qcu = carry
+                if with_state:
+                    g, ring, qt, qdl, qcu, rs, rc = carry
+                else:
+                    g, ring, qt, qdl, qcu = carry
                 i = jnp.argmin(qt)                              # pop
                 t, cu, cl, dl_t = qt[i], qcu[i], qcl[i], qdl[i]
                 loc = jax.tree_util.tree_map(lambda B: B[r], locals_buf)
                 g, weight = aggregate(g, loc, t, cu, cl, dl_t)  # Eq. 10+11
                 ring = jax.tree_util.tree_map(
                     lambda R, G: R.at[r + 1].set(G), ring, g)
+                if with_state:
+                    # the bandit reward is the paper's delay weight, folded
+                    # into the carried accumulators (Eqs. 7, 9)
+                    rew = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
+                    rs = rs.at[i].add(rew)
+                    rc = rc.at[i].add(1.0)
                 # re-schedule vehicle i: download now, train C_l, upload C_u
                 t_up = t + cl
                 slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
@@ -269,11 +334,35 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                 snr = pm * gain * dist ** (-alpha_pl) / sigma2
                 rate = bw * jnp.log2(1.0 + snr)                 # Eq. 5
                 cu_new = bits / jnp.maximum(rate, 1e-12)        # Eq. 6
-                qt = qt.at[i].set(t_up + cu_new)
+                t_new = t_up + cu_new
+                if sel_active:
+                    # admission mask folded into the slot queue: a parked
+                    # vehicle's slot is +inf, invisible to the argmin
+                    t_new = jnp.where(adm_tab[r, i], t_new, jnp.inf)
+                qt = qt.at[i].set(t_new)
                 qdl = qdl.at[i].set(t)
                 qcu = qcu.at[i].set(cu_new)
-                return (g, ring, qt, qdl, qcu), (i, t, cu, cl, dl_t, weight)
+                out = ((g, ring, qt, qdl, qcu, rs, rc) if with_state
+                       else (g, ring, qt, qdl, qcu))
+                return out, (i, t, cu, cl, dl_t, weight)
             return seg_body
+
+        def readmit(qt, qdl, qcu, A, t_b):
+            """Boundary re-admission: schedule vehicles ``A`` (static) at
+            the traced boundary timestamp — the same Eq. 3-6 pipeline as
+            the in-scan re-schedule, vectorized over the newly admitted."""
+            A = jnp.asarray(A)
+            t_up = t_b + qcl[A]
+            slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
+            gain = gains[slot, A]
+            dx = x0[A] + v_c * t_up
+            dx = jnp.mod(dx + cov, 2.0 * cov) - cov
+            dist = jnp.sqrt(dx * dx + dy2H2)
+            snr = pm * gain * dist ** (-alpha_pl) / sigma2
+            rate = bw * jnp.log2(1.0 + snr)
+            cu_new = bits / jnp.maximum(rate, 1e-12)
+            return (qt.at[A].set(t_up + cu_new), qdl.at[A].set(t_b),
+                    qcu.at[A].set(cu_new))
 
         for T, s, e in plan.waves:
             T = np.asarray(T, np.int32)
@@ -291,13 +380,31 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                 T_dev = jnp.asarray(T)
                 locals_buf = jax.tree_util.tree_map(
                     lambda B, L: B.at[T_dev].set(L), locals_buf, loc)
-            carry, ys = jax.lax.scan(
-                make_seg_body(locals_buf), (g, ring, qt, qdl, qcu),
-                jnp.arange(s, e))
-            g, ring, qt, qdl, qcu = carry
-            traces.append(ys)
+            # sub-split [s, e) at re-admission boundaries (static), so the
+            # boundary scheduling runs at trace level between scans
+            pts = sorted({b for b in readmit_at if s < b <= e} | {e})
+            a = s
+            for b in pts:
+                if b > a:
+                    carry0 = ((g, ring, qt, qdl, qcu, rs, rc) if with_state
+                              else (g, ring, qt, qdl, qcu))
+                    carry, ys = jax.lax.scan(
+                        make_seg_body(locals_buf), carry0, jnp.arange(a, b))
+                    if with_state:
+                        g, ring, qt, qdl, qcu, rs, rc = carry
+                    else:
+                        g, ring, qt, qdl, qcu = carry
+                    traces.append(ys)
+                if b in readmit_at:
+                    # t_b = the boundary pop's timestamp (last of the
+                    # sub-segment that just ran)
+                    qt, qdl, qcu = readmit(qt, qdl, qcu, readmit_at[b],
+                                           traces[-1][1][-1])
+                a = b
         trace = tuple(jnp.concatenate([tr[k] for tr in traces])
                       for k in range(6))
+        if with_state:
+            return g, ring, trace, (rs, rc)
         return g, ring, trace
 
     return jax.jit(program)
@@ -310,7 +417,9 @@ def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
     # traced against a different (monkeypatched) trainer
     key = (plan.waves, tuple(plan.dl_round.tolist()), plan.n_slots, p,
            scheme, interpretation, use_kernel, fedasync_mix,
-           _mesh_key(mesh), shapes, client_mod._local_scan)
+           _mesh_key(mesh), shapes,
+           None if plan.sel is None else plan.sel.signature(),
+           client_mod._local_scan)
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
         prog = _build_program(plan, p, scheme=scheme,
@@ -346,6 +455,7 @@ def run_simulation_jit(
     progress=None,
     batch_size: int = 128,
     mesh=None,
+    selection=None,
 ):
     """Run M rounds entirely on device; returns the same ``SimResult`` the
     host engines produce (same record fields, same eval cadence).
@@ -366,7 +476,7 @@ def run_simulation_jit(
     if rounds < 1:
         raise ValueError("rounds must be >= 1")
 
-    plan = plan_fleet(p, seed, rounds)
+    plan = plan_fleet(p, seed, rounds, selection)
     M = rounds
 
     key = jax.random.PRNGKey(seed)
@@ -399,8 +509,14 @@ def run_simulation_jit(
     prog = _get_program(plan, p, scheme=scheme, interpretation=interpretation,
                         use_kernel=use_kernel, mesh=mesh,
                         fedasync_mix=DEFAULT_FEDASYNC_MIX, shapes=shapes)
-    g, ring, trace = prog(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
-                          jnp.float32(lr))
+    with_state = (plan.sel is not None and not plan.sel.is_noop
+                  and plan.sel.spec.policy == "eps-bandit")
+    out = prog(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
+               jnp.float32(lr))
+    if with_state:
+        g, ring, trace, (dev_rs, dev_rc) = out
+    else:
+        g, ring, trace = out
     t_veh, t_time, t_cu, t_cl, t_dlt, t_w = (np.asarray(x) for x in trace)
 
     # divergence guard: the minibatch stacks were paired to rounds by the
@@ -419,6 +535,22 @@ def run_simulation_jit(
         raise RuntimeError(
             "jit engine: device event times diverged from the host dry run "
             f"at round {bad}: {t_time[bad]} vs {plan.times[bad]}")
+    if with_state:
+        # selection divergence guard (DESIGN.md §11): the f32 reward
+        # accumulators carried through the scan must reproduce the host
+        # f64 replay's — the admission decisions were planned from that
+        # reward stream, so disagreement means the device saw different
+        # arrivals than the masks were computed for
+        exp_rs, exp_rc = plan.sel_bandit
+        if not np.array_equal(np.asarray(dev_rc), exp_rc):
+            raise RuntimeError(
+                "jit engine: device bandit arrival counts diverged from "
+                "the host selection replay")
+        if not np.allclose(np.asarray(dev_rs), exp_rs,
+                           rtol=1e-4, atol=1e-3):
+            raise RuntimeError(
+                "jit engine: device bandit reward accumulators diverged "
+                "from the host selection replay")
 
     result = SimResult(scheme=scheme, rounds=[], acc_history=[],
                        loss_history=[], final_params=g)
@@ -438,4 +570,6 @@ def run_simulation_jit(
             if progress:
                 progress(rr, acc)
         result.rounds.append(rec)
+    if plan.sel is not None:
+        result.extras["selection"] = plan.sel.summary()
     return result

@@ -45,6 +45,7 @@ from repro.core.client import Vehicle, VehicleData, local_update_many
 from repro.core.events import EventQueue
 from repro.core.server import RSUServer
 from repro.models.cnn import cnn_forward, init_cnn
+from repro.selection import make_selection_state
 
 
 # accepted run_simulation/run_scenario engine names ('unbatched' is a
@@ -126,13 +127,20 @@ def run_simulation(
     engine: str = "batched",
     wave_chunk: int = 16,
     batch_size: int = 128,
+    selection=None,
 ) -> SimResult:
     """Run M rounds of the chosen aggregation scheme (Algorithm 1).
 
     Every vehicle uses the same minibatch size — ``min(batch_size, min_i
     D_i)`` — so one world compiles exactly one local-training shape (the
     per-vehicle *data volume* heterogeneity that Eq. 8 feeds on lives in
-    the delays, not the minibatch; DESIGN.md §6)."""
+    the delays, not the minibatch; DESIGN.md §6).
+
+    ``selection`` (None | policy name | ``SelectionSpec``) activates the
+    vehicle-selection layer (DESIGN.md §11): unadmitted vehicles are parked
+    at (re-)schedule time — they occupy no queue slot and train no wave —
+    and epoch boundaries (``spec.resel_every`` arrivals) re-score the fleet.
+    ``None`` runs the exact legacy path."""
     if engine not in ENGINES:
         raise ValueError(
             f"unknown engine {engine!r}; expected one of {ENGINES}")
@@ -145,7 +153,7 @@ def run_simulation(
             rounds=rounds, l_iters=l_iters, lr=lr, params=params, seed=seed,
             eval_every=eval_every, use_kernel=use_kernel,
             init_params=init_params, interpretation=interpretation,
-            progress=progress, batch_size=batch_size)
+            progress=progress, batch_size=batch_size, selection=selection)
     p = params or ChannelParams()
     assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
     key = jax.random.PRNGKey(seed)
@@ -157,19 +165,22 @@ def run_simulation(
     clients = [Vehicle(d, lr=lr, batch_size=fleet_batch, seed=seed)
                for d in vehicles_data]
 
+    sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
     timeline = _Timeline(p, seed)
     queue = timeline.queue
     if engine == "batched":
         # The event timeline depends only on the channel/mobility/data-size
         # processes, never on training results — so a cheap time-only dry
         # run tells us *exactly* which (vehicle, cycle) uploads the M
-        # rounds consume, and the wave engine trains nothing else.
-        consumed = _consumed_events(p, seed, rounds)
+        # rounds consume, and the wave engine trains nothing else.  (The
+        # replay carries its own SelectionState, so admission decisions are
+        # reproduced byte-for-byte.)
+        consumed = _consumed_events(p, seed, rounds, selection)
 
     def schedule(vehicle: int, t_download: float):
         timeline.schedule(vehicle, t_download, server.global_params)
 
-    for k in range(p.K):
+    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
         schedule(k, 0.0)
 
     result = SimResult(scheme=scheme, rounds=[], acc_history=[],
@@ -193,8 +204,16 @@ def run_simulation(
             result.loss_history.append((server.round, loss))
             if progress:
                 progress(server.round, acc)
-        # vehicle immediately downloads the fresh global model (Fig. 2)
-        schedule(ev.vehicle, ev.time)
+        if sel is None:
+            # vehicle immediately downloads the fresh global model (Fig. 2)
+            schedule(ev.vehicle, ev.time)
+        else:
+            # mask at schedule: re-download only while admitted; epoch
+            # boundaries re-score and wake newly admitted parked vehicles
+            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
+                schedule(ev.vehicle, ev.time)
+            for v in sel.maybe_reselect(server.round, ev.time):
+                schedule(v, ev.time)
         timeline.prune()
 
     if engine in ("serial", "unbatched"):
@@ -245,6 +264,8 @@ def run_simulation(
 
     result.rounds = server.rounds
     result.final_params = server.global_params
+    if sel is not None:
+        result.extras["selection"] = sel.plan().summary()
     return result
 
 
@@ -293,17 +314,26 @@ class _Timeline:
             self.gains.prune_below(self.queue.earliest_time())
 
 
-def _consumed_events(p: ChannelParams, seed: int,
-                     rounds: int) -> set[tuple[int, int]]:
+def _consumed_events(p: ChannelParams, seed: int, rounds: int,
+                     selection=None) -> set[tuple[int, int]]:
     """Dry-run the timeline (no training, no payloads): the exact set of
-    (vehicle, cycle) uploads consumed within ``rounds`` arrivals."""
+    (vehicle, cycle) uploads consumed within ``rounds`` arrivals.  With a
+    selection policy, the replay drives an identical ``SelectionState`` so
+    parked cycles never enter the set."""
     tl = _Timeline(p, seed)
-    for k in range(p.K):
+    sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
+    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
         tl.schedule(k, 0.0)
     out: set[tuple[int, int]] = set()
     while len(out) < rounds and len(tl.queue):
         ev = tl.queue.pop()
         out.add((ev.vehicle, ev.cycle))
-        tl.schedule(ev.vehicle, ev.time)
+        if sel is None:
+            tl.schedule(ev.vehicle, ev.time)
+        else:
+            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
+                tl.schedule(ev.vehicle, ev.time)
+            for v in sel.maybe_reselect(len(out), ev.time):
+                tl.schedule(v, ev.time)
         tl.prune()
     return out

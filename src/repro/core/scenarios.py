@@ -71,12 +71,27 @@ class Scenario:
     # initial corridor placement: "uniform" traffic or a "rush" wave
     # packed into the westmost segment (CorridorMobility entry profiles)
     corridor_entry: str = "uniform"
+    # vehicle selection (DESIGN.md §11): policy name (None = the paper's
+    # admit-everyone baseline with zero selection machinery), per-RSU
+    # admission cap k, per-RSU upload-airtime budget (seconds/cycle),
+    # bandit exploration probability, and the single-RSU re-selection
+    # epoch in rounds (corridor worlds re-score at reconcile boundaries)
+    selection: Optional[str] = None
+    selection_k: Optional[int] = None
+    selection_budget: Optional[float] = None
+    selection_eps: float = 0.1
+    resel_every: Optional[int] = None
     # dataclasses.replace(...) overrides applied to ChannelParams
     channel_overrides: tuple = ()
 
     def channel(self) -> ChannelParams:
         return dataclasses.replace(ChannelParams(), K=self.K,
                                    **dict(self.channel_overrides))
+
+    def selection_spec(self):
+        """The scenario's :class:`repro.selection.SelectionSpec` (or None)."""
+        from repro.selection import scenario_spec
+        return scenario_spec(self)
 
 
 _REGISTRY: dict[str, Scenario] = {}
@@ -185,6 +200,36 @@ register(Scenario(
     scale=0.0015, max_per_vehicle=128, n_train=4000, n_test=400,
 ))
 register(Scenario(
+    name="fleet-k1000-topk",
+    description="Mega-fleet with weighted-topk selection (DESIGN.md §11): "
+                "the RSU admits the 250 best vehicles by data x compute x "
+                "predicted residence time, so waves shrink 4x at equal "
+                "rounds (arXiv:2304.02832's selection ingredients).",
+    K=1000, rounds=30, l_iters=1, scale=0.004, max_per_vehicle=256,
+    n_train=4000, n_test=400,
+    selection="weighted-topk", selection_k=250,
+))
+register(Scenario(
+    name="fleet-k1000-budget",
+    description="Mega-fleet under a per-cycle upload-airtime budget "
+                "(arXiv:2210.15496's binding constraint): cheapest-upload "
+                "vehicles admitted until 0.5 s of slot budget is spent.",
+    K=1000, rounds=30, l_iters=1, scale=0.004, max_per_vehicle=256,
+    n_train=4000, n_test=400,
+    selection="budget", selection_budget=0.5,
+))
+register(Scenario(
+    name="corridor-r4-k400-bandit",
+    description="Conformance-sized corridor with eps-greedy bandit "
+                "selection: each RSU admits its 25 best vehicles by "
+                "historical delay-weight reward (10% exploration), "
+                "re-scored at every reconcile boundary so handed-over "
+                "vehicles are re-scored by their new RSU.",
+    K=400, rounds=40, l_iters=1, n_rsus=4, reconcile_every=8,
+    scale=0.006, max_per_vehicle=256, n_train=4000, n_test=400,
+    selection="eps-bandit", selection_k=25, selection_eps=0.1,
+))
+register(Scenario(
     name="corridor-rush-hour-r8-k4000",
     description="Rush hour on the mega-corridor: 4000 vehicles in "
                 "platoons of 50 entering at the west end, a density wave "
@@ -267,4 +312,4 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
                           rounds=sc.rounds, l_iters=sc.l_iters, lr=sc.lr,
                           params=p, seed=seed, eval_every=eval_every,
                           use_kernel=use_kernel, engine=eng,
-                          progress=progress)
+                          progress=progress, selection=sc.selection_spec())

@@ -127,6 +127,21 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
     n_shards = _rsu_shards(mesh, R)
     Rl = R // n_shards
 
+    # selection (DESIGN.md §11): same fold as the jit engine — a [M, K]
+    # static mask table gates every re-schedule (parked slots are +inf in
+    # every RSU row), re-admissions run at trace level after the reconcile
+    # whose boundary re-scored the fleet, and only the eps-bandit carries
+    # f32 reward accumulators through the scan (guard-checked)
+    sel_active = plan.sel is not None and not plan.sel.is_noop
+    with_state = sel_active and plan.sel.spec.policy == "eps-bandit"
+    if sel_active:
+        adm_tab = jnp.asarray(
+            np.stack([plan.sel.mask_for_round(r) for r in range(M)]))
+        readmit_at = {b: np.asarray(n, np.int32)
+                      for b, n, _ in plan.sel.boundaries if len(n)}
+    else:
+        readmit_at = {}
+
     if n_shards > 1:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
@@ -196,7 +211,10 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
         # pitfall, DESIGN.md §9) — and ``off`` is this shard's first RSU
         # row (0 when unsharded)
         def body(carry, r):
-            G, qt, qdl, qcu = carry
+            if with_state:
+                G, qt, qdl, qcu, rs, rc = carry
+            else:
+                G, qt, qdl, qcu = carry
             flat = jnp.argmin(qt)                               # pop
             j = flat // K
             i = flat % K
@@ -215,6 +233,11 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             contrib = jax.tree_util.tree_map(
                 lambda nr: jnp.where(owned, nr, jnp.zeros_like(nr)),
                 new_row)
+            if with_state:
+                # bandit reward = the paper's delay weight (Eqs. 7, 9)
+                rew = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
+                rs = rs.at[i].add(rew)
+                rc = rc.at[i].add(1.0)
             # re-schedule vehicle i: download now, train C_l, upload C_u
             t_up = t + cl
             slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
@@ -227,41 +250,46 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             cu_new = bits / jnp.maximum(rate, 1e-12)            # Eq. 6
             t_new = t_up + cu_new
             j_new = serving(wrap_x(i, t_new))    # handover target
+            if sel_active:
+                # admission folded into the slot queue: a parked vehicle
+                # is +inf in every RSU row, invisible to the argmin
+                t_new = jnp.where(adm_tab[r, i], t_new, jnp.inf)
             # slot migration: leave row j, land in row j_new
             qt = qt.at[j, i].set(jnp.inf)
             qt = qt.at[j_new, i].set(t_new)
             qdl = qdl.at[i].set(t)
             qcu = qcu.at[i].set(cu_new)
-            return ((G, qt, qdl, qcu),
-                    (i, j, t, cu, cl, dl_t, weight, contrib))
+            out = ((G, qt, qdl, qcu, rs, rc) if with_state
+                   else (G, qt, qdl, qcu))
+            return out, (i, j, t, cu, cl, dl_t, weight, contrib)
         return body
 
-    def run_segment(G, qt, qdl, qcu, locals_buf, gains, x0, qcl, a, b):
-        """Consume pops ``a..b-1``; returns updated state, the stacked ring
-        rows for those rounds, and the scalar trace columns."""
+    def run_segment(st, locals_buf, gains, x0, qcl, a, b):
+        """Consume pops ``a..b-1``; ``st`` is the carried queue/cohort
+        state tuple; returns the updated tuple, the stacked ring rows for
+        those rounds, and the scalar trace columns."""
         if n_shards == 1:
             body = make_seg_body(locals_buf, gains, x0, qcl, 0)
-            carry, ys = jax.lax.scan(body, (G, qt, qdl, qcu),
-                                     jnp.arange(a, b))
-            G, qt, qdl, qcu = carry
-            return G, qt, qdl, qcu, ys[7], ys[:7]
+            carry, ys = jax.lax.scan(body, st, jnp.arange(a, b))
+            return carry, ys[7], ys[:7]
 
-        def seg_fn(G, qt, qdl, qcu, locals_buf, gains, x0, qcl):
+        def seg_fn(st, locals_buf, gains, x0, qcl):
             off = jax.lax.axis_index(_RSU_AXIS) * Rl
             body = make_seg_body(locals_buf, gains, x0, qcl, off)
-            carry, ys = jax.lax.scan(body, (G, qt, qdl, qcu),
-                                     jnp.arange(a, b))
-            G, qt, qdl, qcu = carry
+            carry, ys = jax.lax.scan(body, st, jnp.arange(a, b))
             rows = jax.tree_util.tree_map(
                 lambda x: jax.lax.psum(x, _RSU_AXIS), ys[7])
-            return G, qt, qdl, qcu, rows, ys[:7]
+            return carry, rows, ys[:7]
 
+        # cohort stack sharded over the RSU axis; queue columns (and the
+        # bandit accumulators, when carried) replicated
+        st_spec = (P(_RSU_AXIS),) + (P(),) * (len(st) - 1)
         fn = shard_map(
             seg_fn, mesh=mesh,
-            in_specs=(P(_RSU_AXIS), P(), P(), P(), P(), P(), P(), P()),
-            out_specs=(P(_RSU_AXIS), P(), P(), P(), P(), P()),
+            in_specs=(st_spec, P(), P(), P(), P()),
+            out_specs=(st_spec, P(), P()),
             check_rep=False)
-        return fn(G, qt, qdl, qcu, locals_buf, gains, x0, qcl)
+        return fn(st, locals_buf, gains, x0, qcl)
 
     def reconcile(G):
         """The cloud tier: FedAvg/EMA of the R cohorts; the only step that
@@ -336,6 +364,34 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             lambda x: jnp.zeros((M,) + x.shape, x.dtype), w0)
         ring = [w0] + [None] * M       # one model per round (see header)
         cons_snaps, cohort_snaps, traces = [], [], []
+        rs = rc = None
+        if with_state:
+            rs = jnp.zeros(K, jnp.float32)
+            rc = jnp.zeros(K, jnp.float32)
+
+        def readmit(qt, qdl, qcu, A, t_b):
+            """Boundary re-admission (post-reconcile): schedule vehicles
+            ``A`` (static) at the traced boundary timestamp — the same
+            Eq. 3-6 pipeline as the in-scan re-schedule, with the slot
+            landing in the row of the RSU serving each vehicle at its new
+            arrival time."""
+            A = jnp.asarray(A)
+            t_up = t_b + qcl[A]
+            slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
+            gain = gains[slot, A]
+            dx = x0[A] + v_c * t_up
+            x_up = jnp.mod(dx + span / 2.0, span) - span / 2.0
+            j_up = serving(x_up)
+            dist = jnp.sqrt((x_up - centers[j_up]) ** 2 + dy2H2)
+            snr = pm * gain * dist ** (-alpha_pl) / sigma2
+            rate = bw * jnp.log2(1.0 + snr)
+            cu_new = bits / jnp.maximum(rate, 1e-12)
+            t_new = t_up + cu_new
+            x_new = jnp.mod(x0[A] + v_c * t_new + span / 2.0,
+                            span) - span / 2.0
+            j_new = serving(x_new)
+            return (qt.at[j_new, A].set(t_new), qdl.at[A].set(t_b),
+                    qcu.at[A].set(cu_new))
 
         for T, s, e in plan.waves:
             T = np.asarray(T, np.int32)
@@ -362,8 +418,14 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             a = s
             for b in points:
                 if b > a:
-                    G, qt, qdl, qcu, rows, ys = run_segment(
-                        G, qt, qdl, qcu, locals_buf, gains, x0, qcl, a, b)
+                    st = ((G, qt, qdl, qcu, rs, rc) if with_state
+                          else (G, qt, qdl, qcu))
+                    st, rows, ys = run_segment(
+                        st, locals_buf, gains, x0, qcl, a, b)
+                    if with_state:
+                        G, qt, qdl, qcu, rs, rc = st
+                    else:
+                        G, qt, qdl, qcu = st
                     traces.append(ys)
                     for r in range(a, b):
                         ring[r + 1] = jax.tree_util.tree_map(
@@ -374,6 +436,13 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                     # reconcile (serial reference order) — its ring row is
                     # the reconciled cohort the upload landed on
                     ring[b] = cohort_row(G, int(up_rsu[b - 1]))
+                if b in readmit_at:
+                    # the boundary re-scored the fleet (fedavg-only, so
+                    # every re-admitted download reads the reconciled
+                    # ring[b] regardless of serving RSU); t_b = the
+                    # boundary pop's timestamp
+                    qt, qdl, qcu = readmit(qt, qdl, qcu, readmit_at[b],
+                                           traces[-1][2][-1])
                 if b in eval_set:
                     cons_snaps.append(consensus(G))
                     if record_cohorts:
@@ -382,6 +451,9 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
 
         trace = tuple(jnp.concatenate([tr[k] for tr in traces])
                       for k in range(7))
+        if with_state:
+            return gather_cohorts(G), cons_snaps, cohort_snaps, trace, \
+                (rs, rc)
         return gather_cohorts(G), cons_snaps, cohort_snaps, trace
 
     return jax.jit(program)
@@ -406,6 +478,7 @@ def run_corridor_simulation(
     mesh=None,
     record_cohorts: bool = False,
     init_params=None,
+    selection=None,
 ):
     """Run ``sc.rounds`` corridor arrivals entirely on device; returns the
     same ``SimResult`` the serial reference produces (same record fields,
@@ -427,6 +500,9 @@ def run_corridor_simulation(
     if mode not in ("fedavg", "ema"):
         raise ValueError(f"unknown reconcile_mode {mode!r}; "
                          "expected 'fedavg' or 'ema'")
+    from repro.selection import check_reconcile_mode, scenario_spec
+    spec = selection if selection is not None else scenario_spec(sc)
+    check_reconcile_mode(spec, mode)
     p = p if p is not None else sc.channel()
     assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
     rounds = sc.rounds
@@ -435,7 +511,8 @@ def run_corridor_simulation(
     R = sc.n_rsus
     entry = getattr(sc, "corridor_entry", "uniform")
 
-    plan = plan_corridor(p, R, seed, rounds, entry=entry)
+    plan = plan_corridor(p, R, seed, rounds, entry=entry, selection=spec,
+                         reconcile_every=sc.reconcile_every)
     M = rounds
     eval_rounds = tuple(sorted({rr for rr in range(1, M + 1)
                                 if rr % eval_every == 0} | {M}))
@@ -474,7 +551,9 @@ def run_corridor_simulation(
                  interpretation, use_kernel, mode,
                  float(getattr(sc, "reconcile_tau", 0.5)),
                  sc.reconcile_every, eval_rounds, record_cohorts,
-                 _mesh_key(mesh), shapes, client_mod._local_scan)
+                 _mesh_key(mesh), shapes,
+                 None if plan.sel is None else plan.sel.signature(),
+                 client_mod._local_scan)
     prog = _PROGRAM_CACHE.get(cache_key)
     if prog is None:
         prog = _build_program(
@@ -490,8 +569,14 @@ def run_corridor_simulation(
     else:
         _PROGRAM_CACHE.move_to_end(cache_key)
 
-    G, cons_snaps, cohort_snaps, trace = prog(
-        w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, jnp.float32(sc.lr))
+    with_state = (plan.sel is not None and not plan.sel.is_noop
+                  and plan.sel.spec.policy == "eps-bandit")
+    out = prog(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
+               jnp.float32(sc.lr))
+    if with_state:
+        G, cons_snaps, cohort_snaps, trace, (dev_rs, dev_rc) = out
+    else:
+        G, cons_snaps, cohort_snaps, trace = out
     t_veh, t_rsu, t_time, t_cu, t_cl, t_dlt, t_w = (
         np.asarray(x) for x in trace)
 
@@ -517,6 +602,20 @@ def run_corridor_simulation(
         raise RuntimeError(
             "corridor engine: device event times diverged from the host "
             f"dry run at round {bad}: {t_time[bad]} vs {plan.times[bad]}")
+    if with_state:
+        # selection divergence guard (DESIGN.md §11): the carried f32
+        # reward accumulators must reproduce the host f64 replay the
+        # admission masks were planned from
+        exp_rs, exp_rc = plan.sel_bandit
+        if not np.array_equal(np.asarray(dev_rc), exp_rc):
+            raise RuntimeError(
+                "corridor engine: device bandit arrival counts diverged "
+                "from the host selection replay")
+        if not np.allclose(np.asarray(dev_rs), exp_rs,
+                           rtol=1e-4, atol=1e-3):
+            raise RuntimeError(
+                "corridor engine: device bandit reward accumulators "
+                "diverged from the host selection replay")
 
     result = SimResult(scheme=f"{scheme}+corridor", rounds=[],
                        acc_history=[], loss_history=[])
@@ -549,4 +648,6 @@ def run_corridor_simulation(
     }
     if record_cohorts:
         result.extras["cohort_snapshots"] = cohort_snaps
+    if plan.sel is not None:
+        result.extras["selection"] = plan.sel.summary()
     return result

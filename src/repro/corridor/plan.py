@@ -14,7 +14,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.channel import ChannelParams, CorridorMobility
+from repro.channel import ChannelParams, CorridorMobility, training_delay
+from repro.selection import make_selection_state
 
 
 @dataclass
@@ -36,28 +37,56 @@ class CorridorPlan:
     n_slots: int                # gain-table height
     q0: dict                    # initial per-vehicle slot arrays (by vehicle)
     row0: np.ndarray            # i32[K] initial RSU row of each vehicle's slot
+    sel: object = None          # SelectionPlan (DESIGN.md §11) or None
+    sel_bandit: object = None   # (rew_sum f64[K], rew_cnt f64[K]) or None
 
 
 def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
-                  entry: str = "uniform") -> CorridorPlan:
+                  entry: str = "uniform", selection=None,
+                  reconcile_every: int = 0) -> CorridorPlan:
     """Dry-run ``rounds`` arrivals through the corridor timeline (no
-    payloads, no training) and derive everything static."""
+    payloads, no training) and derive everything static.  With a selection
+    policy the replay drives a :class:`SelectionState` that re-scores the
+    fleet at every reconcile boundary (handed-over vehicles are re-scored
+    by the RSU serving them at the boundary timestamp)."""
     from repro.core.mafl import _Timeline
 
     corridor = CorridorMobility(p, n_rsus, entry=entry)
+    # corridor worlds re-score ONLY at reconcile boundaries — the spec's
+    # resel_every is never consulted here (mirrors the serial reference's
+    # unconditional `resel_every=sc.reconcile_every`; 0 disables, and the
+    # compiled program splits scan segments at exactly these boundaries)
+    sel = make_selection_state(selection, p, corridor, seed, rounds,
+                               resel_every=reconcile_every)
     tl = _Timeline(p, seed, distance_fn=corridor.distance)
-    for k in range(p.K):
+    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
         tl.schedule(k, 0.0)
 
     ev0 = tl.queue.as_struct_arrays()
-    assert len(np.unique(ev0["vehicle"])) == p.K, \
-        "slot queue invariant: one in-flight upload per vehicle"
-    order = np.argsort(ev0["vehicle"])
-    q0 = {k: v[order] for k, v in ev0.items()}
+    if sel is None:
+        assert len(np.unique(ev0["vehicle"])) == p.K, \
+            "slot queue invariant: one in-flight upload per vehicle"
+    # full-K slot arrays; parked vehicles hold +inf until a re-admission
+    # boundary writes them a live slot (train_delay from Eq. 8 directly —
+    # bit-identical to the event values, defined for parked vehicles too)
+    q0 = {
+        "time": np.full(p.K, np.inf),
+        "download_time": np.zeros(p.K),
+        "upload_delay": np.zeros(p.K),
+        "train_delay": np.array(
+            [training_delay(p, i) for i in range(1, p.K + 1)]),
+    }
+    q0["time"][ev0["vehicle"]] = ev0["time"]
+    q0["download_time"][ev0["vehicle"]] = ev0["download_time"]
+    q0["upload_delay"][ev0["vehicle"]] = ev0["upload_delay"]
     # a slot lives in the row of the RSU serving the vehicle at *arrival*
-    # time — known at schedule time because positions are pure in t
-    row0 = np.asarray(corridor.serving_rsu(np.arange(p.K), q0["time"]),
-                      np.int32)
+    # time — known at schedule time because positions are pure in t; a
+    # parked vehicle's slot is +inf in every row, so its row is moot (0)
+    live = np.isfinite(q0["time"])
+    row0 = np.zeros(p.K, np.int32)
+    row0[live] = np.asarray(
+        corridor.serving_rsu(np.flatnonzero(live), q0["time"][live]),
+        np.int32)
 
     M = rounds
     veh = np.empty(M, np.int32)
@@ -77,7 +106,16 @@ def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
         times[r], c_l[r], c_u[r] = ev.time, ev.train_delay, ev.upload_delay
         dlt[r] = ev.download_time
         last_pop[ev.vehicle] = r
-        tl.schedule(ev.vehicle, ev.time)
+        if sel is None:
+            tl.schedule(ev.vehicle, ev.time)
+        else:
+            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
+                tl.schedule(ev.vehicle, ev.time)
+            for v in sel.maybe_reselect(r + 1, ev.time):
+                # re-admitted at the (post-reconcile) boundary round — its
+                # next pop's payload is ring[r+1], the reconciled model
+                tl.schedule(v, ev.time)
+                last_pop[v] = r
         tl.prune()
 
     # Wave partition — the jit engine's rule verbatim (DESIGN.md §9): a wave
@@ -102,4 +140,7 @@ def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
                         up_rsu=ups, times=times, train_delay=c_l,
                         upload_delay=c_u, download_time=dlt,
                         waves=tuple(waves), n_slots=tl.gains.last_slot + 3,
-                        q0=q0, row0=row0)
+                        q0=q0, row0=row0,
+                        sel=None if sel is None else sel.plan(),
+                        sel_bandit=None if sel is None
+                        else sel.bandit_expectation())

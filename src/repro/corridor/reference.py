@@ -15,6 +15,8 @@ from typing import Sequence
 
 from repro.channel import ChannelParams, CorridorMobility
 from repro.core.hierarchical import ema_toward, reconcile_models
+from repro.selection import (check_reconcile_mode, make_selection_state,
+                             scenario_spec)
 
 
 def run_handover_simulation(sc, vehicles_data: Sequence,
@@ -23,7 +25,7 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
                             interpretation: str = "mixing",
                             use_kernel: bool = False,
                             batch_size: int = 128,
-                            progress=None):
+                            progress=None, selection=None):
     """Multi-RSU MAFL with handover (beyond paper, DESIGN.md §8/§10).
 
     Each RSU keeps its own cohort model and applies the paper's per-arrival
@@ -47,6 +49,8 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
     mode = getattr(sc, "reconcile_mode", "fedavg")
     tau = getattr(sc, "reconcile_tau", 0.5)
     entry = getattr(sc, "corridor_entry", "uniform")
+    spec = selection if selection is not None else scenario_spec(sc)
+    check_reconcile_mode(spec, mode)
 
     init = init_cnn(jax.random.PRNGKey(seed))
     servers = [RSUServer(init, p, scheme=sc.scheme, use_kernel=use_kernel,
@@ -54,7 +58,10 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
                for _ in range(sc.n_rsus)]
     corridor = CorridorMobility(p, sc.n_rsus, entry=entry)
     # same scheduling rules as the single-RSU engine — only the geometry
-    # (distance to the serving RSU) differs
+    # (distance to the serving RSU) differs.  Selection re-scores at every
+    # reconcile boundary (handed-over vehicles by their new RSU).
+    sel = make_selection_state(spec, p, corridor, seed, sc.rounds,
+                               resel_every=sc.reconcile_every)
     timeline = _Timeline(p, seed, distance_fn=corridor.distance)
     queue = timeline.queue
     fleet_batch = min(batch_size, min(d.size for d in vehicles_data))
@@ -66,7 +73,7 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
         timeline.schedule(vehicle, t_download,
                           payload=servers[rsu].global_params)
 
-    for k in range(p.K):
+    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
         schedule(k, 0.0)
 
     result = SimResult(scheme=f"{sc.scheme}+handover", rounds=[],
@@ -104,9 +111,20 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
             if progress:
                 progress(total, acc)
         result.rounds.append(rec)
-        schedule(ev.vehicle, ev.time)
+        if sel is None:
+            schedule(ev.vehicle, ev.time)
+        else:
+            # mask at schedule (post-reconcile, like the ordinary
+            # re-download): park unadmitted vehicles, re-score at every
+            # reconcile boundary, wake newly admitted parked vehicles
+            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
+                schedule(ev.vehicle, ev.time)
+            for v in sel.maybe_reselect(total, ev.time):
+                schedule(v, ev.time)
         timeline.prune()
 
     result.final_params = reconcile_models(
         [s.global_params for s in servers])
+    if sel is not None:
+        result.extras["selection"] = sel.plan().summary()
     return result

@@ -1,0 +1,16 @@
+"""Device-resident vehicle-selection subsystem (DESIGN.md §11): pluggable
+admission policies every engine consumes as compiled masks."""
+from repro.selection.policy import (POLICIES, AdmitAll, BanditState,
+                                    BudgetPolicy, EpsBandit,
+                                    SelectionContext, SelectionPolicy,
+                                    SelectionSpec, WeightedTopK,
+                                    make_policy)
+from repro.selection.runtime import (SelectionPlan, SelectionState,
+                                     check_reconcile_mode,
+                                     make_selection_state, scenario_spec)
+
+__all__ = ["POLICIES", "AdmitAll", "BanditState", "BudgetPolicy",
+           "EpsBandit", "SelectionContext", "SelectionPolicy",
+           "SelectionSpec", "WeightedTopK", "make_policy", "SelectionPlan",
+           "SelectionState", "make_selection_state", "scenario_spec",
+           "check_reconcile_mode"]

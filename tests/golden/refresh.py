@@ -1,0 +1,93 @@
+"""Regenerate the golden-trace fixtures (tests/golden/*.json).
+
+    PYTHONPATH=src python tests/golden/refresh.py
+
+Each fixture pins one scenario world: the exact consumed-arrival sequence
+((round, vehicle, rsu) + f64 host timestamps from the serial engine) and a
+per-engine sha256 digest of the final model parameters.
+``tests/test_golden_traces.py`` asserts every engine still reproduces them
+— and that admit-all selection is bitwise identical to no selection — so
+engine edits cannot silently change the simulation semantics.
+
+Digests are bitwise and therefore pinned to the (jax, numpy) versions
+recorded in the fixture; the test degrades the digest check to an
+accuracy check when the installed versions differ (event traces stay
+strict — they are pure host f64 and version-stable).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpointing.checkpoint import tree_digest  # noqa: E402
+from repro.core.scenarios import run_scenario  # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# cheap-but-real worlds: full CNN training, shortened rounds
+FIXTURES = {
+    "paper-k10": {
+        "overrides": {"rounds": 12, "l_iters": 2},
+        "eval_every": 12,
+        "engines": ["serial", "batched", "jit"],
+    },
+    "highway-k40-handover": {
+        "overrides": {"rounds": 12, "l_iters": 1},
+        "eval_every": 6,
+        "engines": ["serial", "corridor"],
+    },
+    "corridor-quick-r2-k8": {
+        "overrides": {"rounds": 8},
+        "eval_every": 4,
+        "engines": ["serial", "corridor"],
+    },
+}
+
+
+def build_fixture(name: str, cfg: dict) -> dict:
+    out = {
+        "scenario": name,
+        "overrides": cfg["overrides"],
+        "eval_every": cfg["eval_every"],
+        "seed": 0,
+        "versions": {"jax": jax.__version__, "numpy": np.__version__},
+        "engines": {},
+    }
+    for engine in cfg["engines"]:
+        print(f"  {name} / {engine} ...")
+        r = run_scenario(name, engine=engine, seed=0,
+                         eval_every=cfg["eval_every"], **cfg["overrides"])
+        if engine == cfg["engines"][0]:
+            # the canonical f64 host trace (serial engine first)
+            out["trace"] = {
+                "round": [rec.round for rec in r.rounds],
+                "vehicle": [rec.vehicle for rec in r.rounds],
+                "rsu": [rec.rsu for rec in r.rounds],
+                "time": [rec.time for rec in r.rounds],
+            }
+        out["engines"][engine] = {
+            "digest": tree_digest(r.final_params),
+            "final_accuracy": float(r.final_accuracy()),
+        }
+    return out
+
+
+def main():
+    for name, cfg in FIXTURES.items():
+        fx = build_fixture(name, cfg)
+        path = os.path.join(HERE, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(fx, f, indent=1)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()
