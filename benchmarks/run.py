@@ -18,6 +18,17 @@
                (DESIGN.md §11): admit-all vs weighted-topk vs budget
                ms/round on fleet-k1000 at equal rounds; QUICK=1 smokes
                quick-k5 with topk through serial/batched/jit
+  perf       — flat-parameter fast-path comparison -> BENCH_perf.json at
+               the REPO ROOT (DESIGN.md §12): batched/jit-pytree/jit-flat
+               (+bf16) ms/round on fleet-k1000 + corridor-r4-k400 +
+               fleet-k10000, consolidating the other BENCH headline
+               numbers; QUICK=1 runs the smoke lanes only.
+               ``perf check`` compares fresh QUICK lanes against the
+               committed baseline (2x threshold, CI perf-regression job);
+               ``perf k10000-smoke`` compile-smokes fleet-k10000.
+
+All committed (non-quick) BENCH_*.json artifacts are also copied to the
+repo root, where the perf-trajectory tracker reads them.
 
 ``python -m benchmarks.run``            runs everything (QUICK=1 shrinks the
 simulation rounds for CI-speed smoke runs).
@@ -85,6 +96,10 @@ def main() -> None:
         selection_bench.run(quick=quick, **kw)
         return
 
+    if which == "perf":
+        from benchmarks import perf_bench
+        sys.exit(perf_bench.main(sys.argv[2:]))
+
     if which in ("all", "kernels"):
         print("== kernel microbenchmarks ==")
         from benchmarks import kernel_micro
@@ -124,6 +139,11 @@ def main() -> None:
         print("\n== Selection policy comparison ==")
         from benchmarks import selection_bench
         selection_bench.run(quick=quick)
+
+    if which == "all":
+        print("\n== Flat fast-path comparison ==")
+        from benchmarks import perf_bench
+        perf_bench.run(quick=quick)
 
     print(f"\ntotal {time.time() - t0:.0f}s")
 

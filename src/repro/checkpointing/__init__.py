@@ -1,4 +1,8 @@
-from repro.checkpointing.checkpoint import (load_checkpoint, save_checkpoint,
-                                            latest_checkpoint)
+from repro.checkpointing.checkpoint import (latest_checkpoint,
+                                            load_checkpoint,
+                                            load_flat_checkpoint,
+                                            save_checkpoint,
+                                            save_flat_checkpoint)
 
-__all__ = ["load_checkpoint", "save_checkpoint", "latest_checkpoint"]
+__all__ = ["load_checkpoint", "save_checkpoint", "latest_checkpoint",
+           "load_flat_checkpoint", "save_flat_checkpoint"]

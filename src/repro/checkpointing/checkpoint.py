@@ -79,6 +79,37 @@ def latest_checkpoint(directory: str) -> str | None:
     return os.path.join(directory, ckpts[-1]) if ckpts else None
 
 
+def save_flat_checkpoint(directory: str, step: int, flat, layout,
+                         keep: int = 3, meta: dict | None = None) -> str:
+    """Checkpoint a packed flat-parameter buffer (DESIGN.md §12) together
+    with its :class:`repro.core.flat.ParamLayout`, so a flat engine state
+    restores without a template pytree — and round-trips bit-exactly for
+    both f32 and bf16 ring buffers (the bf16 view trick of ``_flatten``).
+    Shares the ``ckpt_NNNNNNNN.npz`` naming/retention with the pytree
+    checkpoints; the layout rides in the sidecar json under ``"layout"``."""
+    m = dict(meta or {})
+    m["layout"] = layout.to_json()
+    return save_checkpoint(directory, step, {"flat": flat}, keep=keep,
+                           meta=m)
+
+
+def load_flat_checkpoint(path: str):
+    """Restore ``(flat_buffer, layout)`` from a flat checkpoint; use
+    ``layout.unpack(flat_buffer)`` for the pytree view."""
+    import ml_dtypes
+
+    from repro.core.flat import ParamLayout
+    with open(path + ".json") as f:
+        layout = ParamLayout.from_json(json.load(f)["layout"])
+    data = np.load(path)
+    if "flat::bf16" in data:
+        flat = data["flat::bf16"].view(ml_dtypes.bfloat16)
+    else:
+        flat = data["flat"]
+    assert flat.shape[-1] == layout.P, (flat.shape, layout.P)
+    return flat, layout
+
+
 def load_checkpoint(path: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (a template pytree)."""
     import ml_dtypes

@@ -94,6 +94,39 @@ def mafl_update(global_params, local_params, beta: float, weight: float,
     return _ema(global_params, local_params, 1.0 - alpha)
 
 
+def chain_coeffs(scheme: str, interpretation: str, beta, weight,
+                 t=None, dl_t=None, fedasync_mix=None):
+    """Per-upload ``(c, d)`` mix pairs for a chain of aggregations:
+    ``g <- c*g + d*l`` (the form ``ring_agg`` streams, DESIGN.md §12).
+
+    Vectorized over a segment's trace columns (``weight``/``t``/``dl_t``
+    may be arrays), and arithmetically *identical* per element to the
+    per-arrival scalar path in the **device engines'** ``aggregate``
+    closures — same f32 expressions (``1.0 - f32(beta)`` etc.) in the
+    same order — so a fused chain built from these stays bitwise against
+    the device engines' sequential mixes (verified per beta in
+    ``tests/test_flat.py``).  The *host* serial path is a different
+    reference: it derives mafl's alpha in Python f64 before the f32
+    cast, which is why host and device digests are pinned per-engine."""
+    if scheme == "mafl" and interpretation == "literal":
+        b = jnp.float32(beta)
+        c = jnp.broadcast_to(b, jnp.shape(weight))
+        return c, (1.0 - b) * jnp.asarray(weight, jnp.float32)
+    if scheme == "mafl":
+        alpha = jnp.clip((1.0 - jnp.float32(beta)) *
+                         jnp.asarray(weight, jnp.float32), 0.0, 1.0)
+    elif scheme == "afl":
+        alpha = jnp.broadcast_to(1.0 - jnp.float32(beta),
+                                 jnp.shape(weight)).astype(jnp.float32)
+    elif scheme == "fedasync":
+        stale = jnp.maximum(jnp.asarray(t, jnp.float32) -
+                            jnp.asarray(dl_t, jnp.float32), 0.0)
+        alpha = jnp.float32(fedasync_mix) * (stale + 1.0) ** (-0.5)
+    else:
+        raise ValueError(f"no chain coefficients for scheme {scheme!r}")
+    return 1.0 - alpha, alpha
+
+
 def afl_update(global_params, local_params, beta: float):
     """Conventional AFL (the paper's baseline): Eq. (11), unweighted."""
     return _ema(global_params, local_params, beta)

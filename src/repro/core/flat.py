@@ -1,0 +1,177 @@
+"""Packed flat-parameter representation (DESIGN.md §12).
+
+The AFL update (Eq. 10+11) is an elementwise mix, so at fleet scale the
+RSU-side cost is pure memory traffic over the model.  A pytree model pays
+that traffic once *per leaf* per upload — eight kernel launches for the
+paper CNN — and forces the snapshot ring to be a pytree of ``[M+1, ...]``
+buffers.  :class:`ParamLayout` fixes the layout instead: every model state
+is one lane-aligned contiguous ``f32[P]`` buffer, the ring is a single
+``[M+1, P]`` array (download = one row gather, upload = one row scatter),
+and a whole chain of staleness-weighted mixes streams through one fused
+kernel (``repro.kernels.weighted_agg.ring_agg``).
+
+The layout is static host data derived once from a template pytree:
+per-leaf offsets (each aligned to the 128-lane boundary so unpacked views
+keep TPU-friendly alignment), shapes, and the padded total ``P``.  Packing
+writes each leaf into its slice; unpacking is ``lax.slice`` + ``reshape``
+per leaf — under ``jit`` these are views XLA folds into the consumers, so
+training code keeps operating on ordinary pytrees with zero host copies.
+Both directions preserve bits exactly (``unpack(pack(t)) == t`` bitwise),
+which is what lets the flat engines reproduce the PR-4 golden traces.
+
+Leading batch axes broadcast through both directions: packing a tree whose
+leaves carry ``[n, ...]`` produces ``[n, P]``; unpacking ``[n, P]`` (or
+``[M+1, P]`` ring rows) returns the batched tree.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from functools import cached_property
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the '/'-joined path-key convention is checkpointing's; one definition
+from repro.checkpointing.checkpoint import _part
+
+LANE = 128      # pack granularity == the kernel lane width
+
+
+def _align(n: int) -> int:
+    return ((n + LANE - 1) // LANE) * LANE
+
+
+@dataclass(frozen=True)
+class ParamLayout:
+    """Static offsets/shapes of a pytree packed into one ``[P]`` buffer.
+
+    ``names`` are '/'-joined path keys (the checkpointing convention), in
+    canonical ``tree_flatten`` order; ``dtypes`` are the template dtypes
+    restored by :meth:`unpack`.  Hashable, so it can ride in program-cache
+    keys."""
+    names: tuple            # str per leaf
+    shapes: tuple           # tuple[int, ...] per leaf
+    dtypes: tuple           # str per leaf
+    offsets: tuple          # int per leaf, lane-aligned
+    sizes: tuple            # int per leaf
+    P: int                  # padded total length (multiple of LANE)
+    treedef: object = None  # jax treedef (not part of eq/hash identity)
+
+    def __eq__(self, other):
+        if not isinstance(other, ParamLayout):
+            return NotImplemented
+        return self.signature() == other.signature()
+
+    def __hash__(self):
+        return hash(self.signature())
+
+    def signature(self) -> tuple:
+        return (self.names, self.shapes, self.dtypes, self.offsets,
+                self.sizes, self.P)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_tree(cls, tree) -> "ParamLayout":
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        names, shapes, dtypes, offsets, sizes = [], [], [], [], []
+        off = 0
+        for path, leaf in flat:
+            names.append("/".join(_part(p) for p in path))
+            shape = tuple(int(s) for s in leaf.shape)
+            size = int(np.prod(shape)) if shape else 1
+            shapes.append(shape)
+            dtypes.append(str(jnp.asarray(leaf).dtype))
+            offsets.append(off)
+            sizes.append(size)
+            off = _align(off + size)
+        return cls(names=tuple(names), shapes=tuple(shapes),
+                   dtypes=tuple(dtypes), offsets=tuple(offsets),
+                   sizes=tuple(sizes), P=off, treedef=treedef)
+
+    @cached_property
+    def nbytes_f32(self) -> int:
+        return 4 * self.P
+
+    # -- pack / unpack ------------------------------------------------------
+    def _batch_of(self, tree) -> tuple:
+        leaf0 = jax.tree_util.tree_leaves(tree)[0]
+        nd = len(self.shapes[0])
+        batch = tuple(leaf0.shape[:leaf0.ndim - nd])
+        return batch
+
+    def pack(self, tree, dtype=jnp.float32):
+        """Tree -> contiguous ``[*batch, P]`` buffer (gaps/padding zero)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        assert len(leaves) == len(self.names), \
+            (len(leaves), len(self.names))
+        batch = self._batch_of(tree)
+        out = jnp.zeros(batch + (self.P,), dtype)
+        for leaf, off, size, shape in zip(leaves, self.offsets, self.sizes,
+                                          self.shapes):
+            assert tuple(leaf.shape) == batch + shape, \
+                (leaf.shape, batch, shape)
+            flat = jnp.reshape(leaf, batch + (size,)).astype(dtype)
+            out = out.at[..., off:off + size].set(flat)
+        return out
+
+    def unpack(self, flat):
+        """``[*batch, P]`` buffer -> tree of template-dtype leaves.
+
+        Each leaf is a slice+reshape view; a non-f32 buffer (the bf16 ring
+        mode) is cast back to the template dtype leaf-by-leaf."""
+        batch = tuple(flat.shape[:-1])
+        assert flat.shape[-1] == self.P, (flat.shape, self.P)
+        leaves = []
+        for off, size, shape, dt in zip(self.offsets, self.sizes,
+                                        self.shapes, self.dtypes):
+            leaf = jnp.reshape(flat[..., off:off + size], batch + shape)
+            leaves.append(leaf.astype(dt))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- serialization (checkpointing) --------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "names": list(self.names),
+            "shapes": [list(s) for s in self.shapes],
+            "dtypes": list(self.dtypes),
+            "offsets": list(self.offsets),
+            "sizes": list(self.sizes),
+            "P": self.P,
+        })
+
+    @classmethod
+    def from_json(cls, text: str) -> "ParamLayout":
+        """Rebuild a layout that can unpack without a template tree.
+
+        The treedef is reconstructed as a nested *dict* keyed by the
+        '/'-joined path components (a list/tuple pytree therefore
+        restores as a dict with stringified indices — canonicalized, not
+        silently reordered): dict flattening sorts keys lexically, which
+        can differ from the stored leaf order (e.g. '10' < '2'), so the
+        per-leaf columns are permuted to the rebuilt treedef's own
+        flatten order — every name keeps its offsets/shape/dtype."""
+        d = json.loads(text)
+        nested: dict = {}
+        for name in d["names"]:
+            node = nested
+            parts = name.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = 0
+        flat, treedef = jax.tree_util.tree_flatten_with_path(nested)
+        canonical = ["/".join(_part(p) for p in path) for path, _ in flat]
+        assert sorted(canonical) == sorted(d["names"]), \
+            (canonical, d["names"])
+        by_name = {n: i for i, n in enumerate(d["names"])}
+        order = [by_name[n] for n in canonical]
+        lay = cls(names=tuple(canonical),
+                  shapes=tuple(tuple(d["shapes"][i]) for i in order),
+                  dtypes=tuple(d["dtypes"][i] for i in order),
+                  offsets=tuple(d["offsets"][i] for i in order),
+                  sizes=tuple(d["sizes"][i] for i in order),
+                  P=int(d["P"]), treedef=None)
+        object.__setattr__(lay, "treedef", treedef)
+        return lay
+

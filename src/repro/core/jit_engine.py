@@ -39,6 +39,15 @@ the *event loop itself* into XLA:
   argmin/scalar/elementwise-aggregation ops, which lose nothing inside a
   compiled loop body.
 
+- **Packed flat fast path (default, DESIGN.md §12).**  ``flat=True``
+  replaces the pytree model states with one lane-aligned ``f32[P]``
+  buffer per state (``core/flat.py``): the model leaves the scan carry,
+  the ring materializes only checkpoint rows, aggregation is one vector
+  op per pop (or a fused ``ring_agg`` chain under ``use_kernel`` /
+  accelerator backends), and ``ring_dtype="bf16"`` halves the ring +
+  upload buffers around f32 master weights.  ``flat=False`` keeps the
+  legacy pytree program below as the benchmark baseline.
+
 Times inside the program are ``f32`` (the event semantics are unchanged;
 conformance vs the f64 host engines is to tolerance — pinned exactly on the
 (round, vehicle) sequence by ``tests/test_engine_conformance.py``).  The
@@ -195,9 +204,22 @@ def _mesh_key(mesh) -> tuple:
 
 def _wave_train(local_scan, mesh, n_events, shared: bool):
     """The wave-training block: vmap over events, optionally sharded over
-    the mesh ``"data"`` axis via shard_map (DESIGN.md §5, §9)."""
+    the mesh ``"data"`` axis via shard_map (DESIGN.md §5, §9).
+
+    The trained weights pass through an ``optimization_barrier``: without
+    it XLA:CPU re-fuses the SGD epilogue (``w - lr*g``) into whatever
+    consumes the wave — and FMA-contracts it differently per consumer, so
+    the *same* training would yield different low bits under the pytree
+    and flat layouts (DESIGN.md §12).  The host engines materialize
+    training outputs at their jit-call boundaries by construction; the
+    barrier gives the device programs the same property, making the flat
+    fast path bitwise against the pytree path."""
     axes = (None if shared else 0, 0, 0, None)
-    f = jax.vmap(local_scan, in_axes=axes)
+    vf = jax.vmap(local_scan, in_axes=axes)
+
+    def f(pay, imgs, labs, lr):
+        loc, losses = vf(pay, imgs, labs, lr)
+        return jax.lax.optimization_barrier((loc, losses))
     if mesh is None or "data" not in mesh.shape:
         return f
     n_data = mesh.shape["data"]
@@ -212,12 +234,51 @@ def _wave_train(local_scan, mesh, n_events, shared: bool):
                      out_specs=(P("data"), P("data")), check_rep=False)
 
 
+def _ring_interpret(use_kernel: bool):
+    """``ring_agg`` dispatch mode: ``None`` auto-selects (compiled Pallas
+    on TPU, the jnp chain elsewhere); ``use_kernel=True`` forces the
+    Pallas kernel — compiled on TPU, the interpreter on CPU *and* GPU
+    (the kernel's cross-chunk accumulation needs a sequential grid)."""
+    import jax as _jax
+    return (_jax.default_backend() != "tpu") if use_kernel else None
+
+
+def _chain_segment(g, locals_buf, coeffs, snaps, s: int, e: int,
+                   needed, store, ring_interpret):
+    """Advance the f32 master ``g`` across scan segment ``[s, e)`` as fused
+    ``ring_agg`` chains, materializing a snapshot row only at the rounds in
+    ``needed`` (later-wave payloads / evals) — the global model streams
+    once per checkpoint interval instead of once per upload, and the
+    arithmetic stays the bitwise sequential chain (DESIGN.md §12).
+
+    ``coeffs`` are the segment's per-upload (c, d) pairs (f32[e-s, 2]);
+    ``snaps`` is the trace-level dict of stored ring rows."""
+    from repro.kernels.weighted_agg import ops as agg_ops
+    a = s
+    for b in sorted({x for x in needed if s < x <= e} | {e}):
+        if b > a:
+            g = agg_ops.ring_agg(g, locals_buf[a:b], coeffs[a - s:b - s],
+                                 interpret=ring_interpret)
+        if b in needed:
+            snaps[b] = store(g)
+        a = b
+    return g
+
+
 def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                    interpretation: str, use_kernel: bool, mesh,
-                   fedasync_mix: float):
+                   fedasync_mix: float, flat_layout=None,
+                   ring_dtype: str = "f32", eval_rounds: tuple = ()):
     """Trace-time constants live in the closure; the returned function is
     cached on the plan/world structure so repeated runs of the same world
-    (determinism tests, warm benchmarks) compile exactly once."""
+    (determinism tests, warm benchmarks) compile exactly once.
+
+    ``flat_layout`` selects the packed flat-parameter fast path (DESIGN.md
+    §12): model states become lane-aligned ``[P]`` buffers, the model
+    leaves the event-loop scan entirely (the scan carries only queue
+    columns), and each segment's aggregation runs as a fused ``ring_agg``
+    chain.  ``ring_dtype="bf16"`` stores snapshot rows and upload buffers
+    in bf16 (f32 master weights, f32 accumulation)."""
     M = len(plan.veh)
     K = p.K
     d = np.asarray(plan.dl_round)
@@ -253,6 +314,22 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
     else:
         readmit_at = {}
 
+    def eq36_upload_delay(gains, x0, idx, t_up):
+        """Eq. 3-6 re-schedule pipeline: slot gain -> position wrap ->
+        distance -> SNR -> Shannon rate -> upload delay.  ``idx`` may be
+        a scalar pop or a vector of re-admissions; ONE definition serves
+        the legacy and flat scan bodies and both readmit helpers — the
+        arithmetic (and its op order) is part of the flat-vs-pytree
+        bitwise pin, so it must never fork."""
+        slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
+        gain = gains[slot, idx]
+        dx = x0[idx] + v_c * t_up                       # Eq. 3
+        dx = jnp.mod(dx + cov, 2.0 * cov) - cov         # re-entry wrap
+        dist = jnp.sqrt(dx * dx + dy2H2)                # Eq. 4
+        snr = pm * gain * dist ** (-alpha_pl) / sigma2
+        rate = bw * jnp.log2(1.0 + snr)                 # Eq. 5
+        return bits / jnp.maximum(rate, 1e-12)          # Eq. 6
+
     def aggregate(g, loc, t, cu, cl, dl_t):
         """One arrival's update — mirrors the host paths bit-for-bit in
         formula and f32 arithmetic (aggregation.mix_update_donated /
@@ -286,6 +363,174 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                           alpha * b.astype(jnp.float32)).astype(a.dtype),
             g, loc)
         return new, weight
+
+    if flat_layout is not None:
+        from repro.core.aggregation import chain_coeffs
+
+        layout = flat_layout
+        bf16 = ring_dtype == "bf16"
+        store_dtype = jnp.bfloat16 if bf16 else jnp.float32
+        store = ((lambda x: x.astype(jnp.bfloat16)) if bf16
+                 else (lambda x: x))
+        ring_interp = _ring_interpret(use_kernel)
+        # Fused-chain mode: aggregation leaves the scan entirely and runs
+        # as ring_agg chains between checkpoints (the multi-upload Pallas
+        # kernel on TPU/GPU, its jnp form under use_kernel on CPU).  On
+        # the CPU default the mix stays *inside* the scan instead,
+        # operating on the packed [P] buffer: XLA:CPU FMA-contracts fused
+        # elementwise loops by emission context (flags cannot disable it,
+        # DESIGN.md §12), and the in-scan form is the one that reproduces
+        # the pytree path's golden digests bit-for-bit.
+        fused_chain = use_kernel or jax.default_backend() != "cpu"
+        # rounds whose post-round model must materialize: later-wave
+        # payloads and eval rows — everything else is never read, so the
+        # chain streams straight through it
+        needed = set(int(x) for x in eval_rounds)
+        for T, _s, _e in plan.waves:
+            needed |= {int(d[t]) + 1 for t in T if d[t] >= 0}
+
+        def program_flat(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
+                         lr):
+            local_scan = client_mod._local_scan
+            g = layout.pack(w0)                 # f32[P] master weights
+            locals_buf = jnp.zeros((M, layout.P), store_dtype)
+            snaps = {0: store(g)}
+            rs = rc = None
+            if with_state:
+                rs = jnp.zeros(K, jnp.float32)
+                rc = jnp.zeros(K, jnp.float32)
+            traces = []
+
+            def make_flat_body(locals_buf):
+                # fused_chain: queue bookkeeping only — the model is out
+                # of the scan carry entirely and aggregation streams
+                # per-checkpoint afterwards.  Otherwise the [P]-buffer mix
+                # rides in the scan (one fused vector op per pop instead
+                # of one op per leaf), bitwise the legacy body.  Fresh
+                # body per segment: locals_buf rebinds per wave (the
+                # lax.scan traced-body cache pitfall, DESIGN.md §9).
+                def seg_body(carry, r):
+                    if fused_chain:
+                        g = None
+                        if with_state:
+                            qt, qdl, qcu, rs, rc = carry
+                        else:
+                            qt, qdl, qcu = carry
+                    elif with_state:
+                        g, qt, qdl, qcu, rs, rc = carry
+                    else:
+                        g, qt, qdl, qcu = carry
+                    i = jnp.argmin(qt)                          # pop
+                    t, cu, cl, dl_t = qt[i], qcu[i], qcl[i], qdl[i]
+                    if fused_chain:
+                        if scheme == "mafl":
+                            weight = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
+                        else:
+                            weight = jnp.float32(1.0)
+                    else:
+                        # Eq. 10+11 on the packed buffer, one vector op
+                        g, weight = aggregate(g, locals_buf[r], t, cu, cl,
+                                              dl_t)
+                    if with_state:
+                        rew = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
+                        rs = rs.at[i].add(rew)
+                        rc = rc.at[i].add(1.0)
+                    t_up = t + cl
+                    cu_new = eq36_upload_delay(gains, x0, i, t_up)
+                    t_new = t_up + cu_new
+                    if sel_active:
+                        t_new = jnp.where(adm_tab[r, i], t_new, jnp.inf)
+                    qt = qt.at[i].set(t_new)
+                    qdl = qdl.at[i].set(t)
+                    qcu = qcu.at[i].set(cu_new)
+                    if fused_chain:
+                        out = ((qt, qdl, qcu, rs, rc) if with_state
+                               else (qt, qdl, qcu))
+                    else:
+                        out = ((g, qt, qdl, qcu, rs, rc) if with_state
+                               else (g, qt, qdl, qcu))
+                    return out, (i, t, cu, cl, dl_t, weight)
+                return seg_body
+
+            def readmit(qt, qdl, qcu, A, t_b):
+                A = jnp.asarray(A)
+                t_up = t_b + qcl[A]
+                cu_new = eq36_upload_delay(gains, x0, A, t_up)
+                return (qt.at[A].set(t_up + cu_new), qdl.at[A].set(t_b),
+                        qcu.at[A].set(cu_new))
+
+            for T, s, e in plan.waves:
+                T = np.asarray(T, np.int32)
+                if len(T):
+                    pay_rounds = d[T] + 1
+                    shared = bool((pay_rounds == pay_rounds[0]).all())
+                    if shared:
+                        pay = layout.unpack(snaps[int(pay_rounds[0])])
+                    else:
+                        pay = layout.unpack(jnp.stack(
+                            [snaps[int(pr)] for pr in pay_rounds]))
+                    train = _wave_train(local_scan, mesh, len(T), shared)
+                    loc, _ = train(pay, imgs[T], labs[T], lr)
+                    locals_buf = locals_buf.at[jnp.asarray(T)].set(
+                        layout.pack(loc, dtype=store_dtype))
+                seg_traces = []
+                # sub-split at re-admission boundaries; the in-scan-mix
+                # mode additionally splits at checkpoints so snapshot rows
+                # store at trace level between sub-scans
+                pts = {b for b in readmit_at if s < b <= e} | {e}
+                if not fused_chain:
+                    pts |= {b for b in needed if s < b <= e}
+                a = s
+                for b in sorted(pts):
+                    if b > a:
+                        if fused_chain:
+                            carry0 = ((qt, qdl, qcu, rs, rc) if with_state
+                                      else (qt, qdl, qcu))
+                        else:
+                            carry0 = ((g, qt, qdl, qcu, rs, rc)
+                                      if with_state else (g, qt, qdl, qcu))
+                        carry, ys = jax.lax.scan(
+                            make_flat_body(locals_buf), carry0,
+                            jnp.arange(a, b))
+                        if fused_chain:
+                            if with_state:
+                                qt, qdl, qcu, rs, rc = carry
+                            else:
+                                qt, qdl, qcu = carry
+                        elif with_state:
+                            g, qt, qdl, qcu, rs, rc = carry
+                        else:
+                            g, qt, qdl, qcu = carry
+                        traces.append(ys)
+                        seg_traces.append(ys)
+                    if not fused_chain and b in needed:
+                        snaps[b] = store(g)
+                    if b in readmit_at:
+                        qt, qdl, qcu = readmit(qt, qdl, qcu, readmit_at[b],
+                                               traces[-1][1][-1])
+                    a = b
+                if fused_chain:
+                    # aggregation left the scan entirely: coefficients
+                    # from the segment's own f32 trace (bitwise the legacy
+                    # per-arrival expressions), then one streaming
+                    # ring_agg chain per checkpoint interval
+                    t_c, dlt_c, w_c = (
+                        jnp.concatenate([tr[k] for tr in seg_traces])
+                        for k in (1, 4, 5))
+                    cc, dd = chain_coeffs(scheme, interpretation, p.beta,
+                                          w_c, t=t_c, dl_t=dlt_c,
+                                          fedasync_mix=fedasync_mix)
+                    coeffs = jnp.stack([cc, dd], axis=1)
+                    g = _chain_segment(g, locals_buf, coeffs, snaps, s, e,
+                                       needed, store, ring_interp)
+            trace = tuple(jnp.concatenate([tr[k] for tr in traces])
+                          for k in range(6))
+            evals = jnp.stack([snaps[rr] for rr in eval_rounds])
+            if with_state:
+                return layout.unpack(g), evals, trace, (rs, rc)
+            return layout.unpack(g), evals, trace
+
+        return jax.jit(program_flat)
 
     def program(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, lr):
         local_scan = client_mod._local_scan
@@ -326,14 +571,7 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                     rc = rc.at[i].add(1.0)
                 # re-schedule vehicle i: download now, train C_l, upload C_u
                 t_up = t + cl
-                slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
-                gain = gains[slot, i]
-                dx = x0[i] + v_c * t_up                         # Eq. 3 + wrap
-                dx = jnp.mod(dx + cov, 2.0 * cov) - cov
-                dist = jnp.sqrt(dx * dx + dy2H2)                # Eq. 4
-                snr = pm * gain * dist ** (-alpha_pl) / sigma2
-                rate = bw * jnp.log2(1.0 + snr)                 # Eq. 5
-                cu_new = bits / jnp.maximum(rate, 1e-12)        # Eq. 6
+                cu_new = eq36_upload_delay(gains, x0, i, t_up)
                 t_new = t_up + cu_new
                 if sel_active:
                     # admission mask folded into the slot queue: a parked
@@ -353,14 +591,7 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
             the in-scan re-schedule, vectorized over the newly admitted."""
             A = jnp.asarray(A)
             t_up = t_b + qcl[A]
-            slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
-            gain = gains[slot, A]
-            dx = x0[A] + v_c * t_up
-            dx = jnp.mod(dx + cov, 2.0 * cov) - cov
-            dist = jnp.sqrt(dx * dx + dy2H2)
-            snr = pm * gain * dist ** (-alpha_pl) / sigma2
-            rate = bw * jnp.log2(1.0 + snr)
-            cu_new = bits / jnp.maximum(rate, 1e-12)
+            cu_new = eq36_upload_delay(gains, x0, A, t_up)
             return (qt.at[A].set(t_up + cu_new), qdl.at[A].set(t_b),
                     qcu.at[A].set(cu_new))
 
@@ -411,7 +642,8 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
 
 
 def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
-                 use_kernel, mesh, fedasync_mix, shapes):
+                 use_kernel, mesh, fedasync_mix, shapes, flat_layout=None,
+                 ring_dtype="f32", eval_rounds=()):
     # the trainer function rides in the key as the object itself, not its
     # id(): ids are reused after GC, which could silently replay a program
     # traced against a different (monkeypatched) trainer
@@ -419,13 +651,17 @@ def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
            scheme, interpretation, use_kernel, fedasync_mix,
            _mesh_key(mesh), shapes,
            None if plan.sel is None else plan.sel.signature(),
-           client_mod._local_scan)
+           client_mod._local_scan,
+           None if flat_layout is None else flat_layout.signature(),
+           ring_dtype, eval_rounds if flat_layout is not None else ())
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
         prog = _build_program(plan, p, scheme=scheme,
                               interpretation=interpretation,
                               use_kernel=use_kernel, mesh=mesh,
-                              fedasync_mix=fedasync_mix)
+                              fedasync_mix=fedasync_mix,
+                              flat_layout=flat_layout, ring_dtype=ring_dtype,
+                              eval_rounds=eval_rounds)
         _PROGRAM_CACHE[key] = prog
         while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
             _PROGRAM_CACHE.popitem(last=False)
@@ -456,14 +692,27 @@ def run_simulation_jit(
     batch_size: int = 128,
     mesh=None,
     selection=None,
+    flat: bool = True,
+    ring_dtype: str = "f32",
 ):
     """Run M rounds entirely on device; returns the same ``SimResult`` the
     host engines produce (same record fields, same eval cadence).
+
+    ``flat=True`` (the native layout, DESIGN.md §12) runs the packed
+    flat-parameter fast path: one ``[P]`` buffer per model state, queue
+    bookkeeping alone in the scan, fused ``ring_agg`` chains for the
+    aggregation — bitwise-identical outputs in f32 (golden-pinned);
+    ``flat=False`` keeps the legacy pytree program (the benchmark
+    baseline).  ``ring_dtype="bf16"`` (flat only) stores snapshot-ring
+    rows and upload buffers in bf16 around f32 master weights/accumulation
+    — halves ring memory at a documented sub-1e-2 parameter rounding
+    (EXPERIMENTS.md §Flat); it must be requested explicitly.
 
     One behavioral difference from the host engines: the whole round loop
     is a single device program, so ``progress`` fires post-hoc — every
     callback arrives in round order *after* the simulation completes, not
     live per arrival."""
+    from repro.core.flat import ParamLayout
     from repro.core.mafl import SimResult, evaluate
 
     if scheme not in _SUPPORTED_SCHEMES:
@@ -471,6 +720,13 @@ def run_simulation_jit(
             f"engine='jit' supports schemes {_SUPPORTED_SCHEMES}, not "
             f"{scheme!r} (fedbuff keeps host-side buffer state — use the "
             "serial or batched engine)")
+    if ring_dtype not in ("f32", "bf16"):
+        raise ValueError(f"unknown ring_dtype {ring_dtype!r}; "
+                         "expected 'f32' or 'bf16'")
+    if ring_dtype == "bf16" and not flat:
+        raise ValueError("ring_dtype='bf16' requires the flat fast path "
+                         "(flat=True): only the packed ring stores bf16 "
+                         "snapshots around f32 master weights")
     p = params or ChannelParams()
     assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
     if rounds < 1:
@@ -506,9 +762,14 @@ def run_simulation_jit(
     shapes = (imgs.shape, tuple(
         (str(path), v.shape, str(v.dtype))
         for path, v in jax.tree_util.tree_leaves_with_path(w0)))
+    layout = ParamLayout.from_tree(w0) if flat else None
+    eval_rounds = tuple(rr for rr in range(1, M + 1)
+                        if rr % eval_every == 0 or rr == rounds)
     prog = _get_program(plan, p, scheme=scheme, interpretation=interpretation,
                         use_kernel=use_kernel, mesh=mesh,
-                        fedasync_mix=DEFAULT_FEDASYNC_MIX, shapes=shapes)
+                        fedasync_mix=DEFAULT_FEDASYNC_MIX, shapes=shapes,
+                        flat_layout=layout, ring_dtype=ring_dtype,
+                        eval_rounds=eval_rounds)
     with_state = (plan.sel is not None and not plan.sel.is_noop
                   and plan.sel.spec.policy == "eps-bandit")
     out = prog(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
@@ -552,6 +813,18 @@ def run_simulation_jit(
                 "jit engine: device bandit reward accumulators diverged "
                 "from the host selection replay")
 
+    if flat and ring_dtype == "bf16":
+        # bf16 divergence guard (DESIGN.md §12): the timeline guards above
+        # stay exact (times never depend on params); the parameters may
+        # only diverge by bf16 rounding — a non-finite master means the
+        # quantized chain blew up, so fail loudly instead of returning it
+        if not all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree_util.tree_leaves(g)):
+            raise RuntimeError(
+                "jit engine: non-finite master weights under "
+                "ring_dtype='bf16' — the quantized snapshot ring diverged "
+                "(rerun with ring_dtype='f32' to bisect)")
+    eval_idx = {rr: k for k, rr in enumerate(eval_rounds)}
     result = SimResult(scheme=scheme, rounds=[], acc_history=[],
                        loss_history=[], final_params=g)
     for r in range(M):
@@ -562,7 +835,10 @@ def run_simulation_jit(
                           weight=float(t_w[r]))
         rr = r + 1
         if rr % eval_every == 0 or rr == rounds:
-            params_r = jax.tree_util.tree_map(lambda R: R[rr], ring)
+            if flat:
+                params_r = layout.unpack(ring[eval_idx[rr]])
+            else:
+                params_r = jax.tree_util.tree_map(lambda R: R[rr], ring)
             acc, loss = evaluate(params_r, test_images, test_labels)
             rec.accuracy, rec.loss = acc, loss
             result.acc_history.append((rr, acc))

@@ -128,6 +128,8 @@ def run_simulation(
     wave_chunk: int = 16,
     batch_size: int = 128,
     selection=None,
+    flat: bool = True,
+    ring_dtype: str = "f32",
 ) -> SimResult:
     """Run M rounds of the chosen aggregation scheme (Algorithm 1).
 
@@ -145,7 +147,7 @@ def run_simulation(
         raise ValueError(
             f"unknown engine {engine!r}; expected one of {ENGINES}")
     if engine == "jit":
-        # device-resident mega-fleet engine (DESIGN.md §9): whole round
+        # device-resident mega-fleet engine (DESIGN.md §9/§12): whole round
         # loop in one compiled program, same event semantics and records
         from repro.core.jit_engine import run_simulation_jit
         return run_simulation_jit(
@@ -153,7 +155,16 @@ def run_simulation(
             rounds=rounds, l_iters=l_iters, lr=lr, params=params, seed=seed,
             eval_every=eval_every, use_kernel=use_kernel,
             init_params=init_params, interpretation=interpretation,
-            progress=progress, batch_size=batch_size, selection=selection)
+            progress=progress, batch_size=batch_size, selection=selection,
+            flat=flat, ring_dtype=ring_dtype)
+    if ring_dtype != "f32":
+        # the bf16 snapshot ring exists only on the packed flat layout of
+        # the device engines (DESIGN.md §12) — an explicit gate, never a
+        # silent precision change on the host paths
+        raise ValueError(
+            f"ring_dtype={ring_dtype!r} requires engine='jit' (or the "
+            "corridor engine); the host engines keep full-precision "
+            "pytrees")
     p = params or ChannelParams()
     assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
     key = jax.random.PRNGKey(seed)

@@ -81,6 +81,11 @@ class Scenario:
     selection_budget: Optional[float] = None
     selection_eps: float = 0.1
     resel_every: Optional[int] = None
+    # snapshot-ring dtype on the device engines' flat fast path (DESIGN.md
+    # §12): "f32" = bitwise-exact (golden-pinned); "bf16" = half-memory
+    # ring + upload buffers around f32 master weights — an explicit
+    # opt-in, never a default precision change
+    ring_dtype: str = "f32"
     # dataclasses.replace(...) overrides applied to ChannelParams
     channel_overrides: tuple = ()
 
@@ -158,6 +163,17 @@ register(Scenario(
     description="Mega-fleet with Dirichlet(0.3) class-skewed shards.",
     K=1000, rounds=30, l_iters=1, scale=0.004, max_per_vehicle=256,
     n_train=4000, n_test=400, dirichlet_alpha=0.3,
+))
+register(Scenario(
+    name="fleet-k10000",
+    description="Giga-fleet: 10000 vehicles under one RSU — the regime "
+                "the DRL-selection literature studies (PAPERS.md) and the "
+                "flat fast path unlocks: the bf16 snapshot ring + packed "
+                "upload buffers halve the ring memory that caps the f32 "
+                "pytree layout (DESIGN.md §12), and aggregation streams "
+                "as fused ring_agg chains.",
+    K=10000, rounds=60, l_iters=1, scale=0.0008, max_per_vehicle=64,
+    n_train=4000, n_test=400, ring_dtype="bf16",
 ))
 register(Scenario(
     name="platoon-burst-k500",
@@ -259,19 +275,29 @@ def build_world(sc: Scenario, seed: int = 0):
 def run_scenario(scenario: str | Scenario, *, seed: int = 0,
                  engine: Optional[str] = None, eval_every: int = 10,
                  progress=None, use_kernel: bool = False, mesh=None,
-                 record_cohorts: bool = False, **overrides) -> SimResult:
+                 record_cohorts: bool = False, flat: Optional[bool] = None,
+                 **overrides) -> SimResult:
     """Build the named world and run it; ``overrides`` replace Scenario
-    fields (e.g. ``rounds=20`` for a shortened run).
+    fields (e.g. ``rounds=20`` for a shortened run, or
+    ``ring_dtype="bf16"`` for the explicit half-memory ring opt-in).
 
     ``engine=None`` auto-selects by topology: ``"batched"`` for single-RSU
     worlds, ``"corridor"`` (the device-resident ``repro.corridor`` engine)
     for multi-RSU ones.  An explicit engine that cannot run the scenario's
     topology raises — the old behavior of silently substituting the serial
     handover loop for whatever was requested is gone.  ``mesh`` /
-    ``record_cohorts`` reach the corridor engine only."""
+    ``record_cohorts`` reach the corridor engine only.  ``flat`` selects
+    the device engines' packed-buffer fast path (DESIGN.md §12); ``None``
+    means the engine default (flat on)."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if overrides:
         sc = dataclasses.replace(sc, **overrides)
+    if sc.ring_dtype != "f32" and (engine not in (None, "jit", "corridor")
+                                   or flat is False):
+        raise ValueError(
+            f"ring_dtype={sc.ring_dtype!r} needs the flat fast path of a "
+            "device engine (engine='jit' or the corridor engine); the "
+            "host engines and the pytree layout keep full precision")
     if sc.n_rsus > 1:
         eng = engine or "corridor"
         if eng not in CORRIDOR_ENGINES:
@@ -280,7 +306,9 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
                 f"{sc.name!r} (n_rsus={sc.n_rsus}); corridor scenarios "
                 f"accept {CORRIDOR_ENGINES}")
     else:
-        eng = engine or "batched"
+        # a non-f32 ring only exists on the jit engine's flat path, so it
+        # flips the single-RSU auto-selection from "batched" to "jit"
+        eng = engine or ("jit" if sc.ring_dtype != "f32" else "batched")
         if eng in CORRIDOR_ENGINES and eng not in ENGINES:
             raise ValueError(
                 f"engine {eng!r} needs a multi-RSU corridor scenario; "
@@ -307,9 +335,11 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
                                        eval_every=eval_every,
                                        use_kernel=use_kernel, mesh=mesh,
                                        record_cohorts=record_cohorts,
-                                       progress=progress)
+                                       progress=progress, flat=flat)
+    kw = {} if flat is None else {"flat": flat}
     return run_simulation(veh, te_i, te_l, scheme=sc.scheme,
                           rounds=sc.rounds, l_iters=sc.l_iters, lr=sc.lr,
                           params=p, seed=seed, eval_every=eval_every,
                           use_kernel=use_kernel, engine=eng,
-                          progress=progress, selection=sc.selection_spec())
+                          progress=progress, selection=sc.selection_spec(),
+                          ring_dtype=sc.ring_dtype, **kw)

@@ -99,9 +99,18 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                    interpretation: str, use_kernel: bool, mesh,
                    reconcile_every: int, reconcile_mode: str,
                    reconcile_tau: float, eval_rounds: tuple,
-                   fedasync_mix: float, record_cohorts: bool):
+                   fedasync_mix: float, record_cohorts: bool,
+                   flat_layout=None, ring_dtype: str = "f32"):
     """Trace-time constants live in the closure; cached per world structure
-    like the jit engine's program."""
+    like the jit engine's program.
+
+    ``flat_layout`` selects the packed flat-parameter fast path (DESIGN.md
+    §12): the cohort stack becomes one ``f32[R, P]`` buffer, ring rows are
+    single ``[P]`` vectors, and aggregation is either the in-scan
+    one-vector-op mix (CPU default — bitwise the pytree path on the golden
+    worlds) or fused per-RSU ``ring_agg`` chains (``use_kernel`` /
+    accelerator backends).  Unsharded only — the ``"rsu"``-mesh path keeps
+    the pytree layout."""
     M = len(plan.veh)
     K = p.K
     R = plan.n_rsus
@@ -202,6 +211,23 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
         j = jnp.floor((x + span / 2.0) / cell).astype(jnp.int32)
         return jnp.clip(j, 0, R - 1)
 
+    def eq36_upload_delay(gains, x0, idx, t_up):
+        """Eq. 3-6 with the corridor geometry: slot gain -> span wrap ->
+        serving-cell distance -> SNR -> Shannon rate -> upload delay.
+        ``idx`` is a scalar pop or a vector of re-admissions; one
+        definition serves the pytree and flat bodies and both readmit
+        helpers — its op order is part of the flat-vs-pytree bitwise
+        pin, so it must never fork."""
+        slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
+        gain = gains[slot, idx]
+        dx = x0[idx] + v_c * t_up                       # Eq. 3
+        x_up = jnp.mod(dx + span / 2.0, span) - span / 2.0
+        j_up = serving(x_up)                 # serving cell at upload
+        dist = jnp.sqrt((x_up - centers[j_up]) ** 2 + dy2H2)  # Eq. 4
+        snr = pm * gain * dist ** (-alpha_pl) / sigma2
+        rate = bw * jnp.log2(1.0 + snr)                 # Eq. 5
+        return bits / jnp.maximum(rate, 1e-12)          # Eq. 6
+
     def make_seg_body(locals_buf, gains, x0, qcl, off):
         def wrap_x(i, t):
             dx = x0[i] + v_c * t                                # Eq. 3
@@ -240,14 +266,7 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                 rc = rc.at[i].add(1.0)
             # re-schedule vehicle i: download now, train C_l, upload C_u
             t_up = t + cl
-            slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
-            gain = gains[slot, i]
-            x_up = wrap_x(i, t_up)
-            j_up = serving(x_up)                 # serving cell at upload
-            dist = jnp.sqrt((x_up - centers[j_up]) ** 2 + dy2H2)  # Eq. 4
-            snr = pm * gain * dist ** (-alpha_pl) / sigma2
-            rate = bw * jnp.log2(1.0 + snr)                     # Eq. 5
-            cu_new = bits / jnp.maximum(rate, 1e-12)            # Eq. 6
+            cu_new = eq36_upload_delay(gains, x0, i, t_up)
             t_new = t_up + cu_new
             j_new = serving(wrap_x(i, t_new))    # handover target
             if sel_active:
@@ -353,6 +372,194 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
     reconcile_set = {b for b in range(reconcile_every, M + 1,
                                       reconcile_every)}
 
+    if flat_layout is not None:
+        from repro.core.aggregation import chain_coeffs
+        from repro.core.jit_engine import _ring_interpret
+        from repro.corridor.plan import rsu_chain_groups
+        from repro.kernels.weighted_agg import ops as agg_ops
+
+        assert n_shards == 1, \
+            "flat fast path is unsharded (mesh 'rsu' axis keeps pytrees)"
+        layout = flat_layout
+        bf16 = ring_dtype == "bf16"
+        store_dtype = jnp.bfloat16 if bf16 else jnp.float32
+        store = ((lambda x: x.astype(jnp.bfloat16)) if bf16
+                 else (lambda x: x))
+        ring_interp = _ring_interpret(use_kernel)
+        fused_chain = use_kernel or jax.default_backend() != "cpu"
+        # ring rows later waves read (payload rounds); evals read the
+        # consensus, never the ring
+        needed = set()
+        for T, _s, _e in plan.waves:
+            needed |= {int(d[t]) + 1 for t in T if d[t] >= 0}
+
+        def program_flat(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, lr):
+            local_scan = client_mod._local_scan
+            G = jnp.broadcast_to(layout.pack(w0)[None],
+                                 (R, layout.P)).astype(jnp.float32)
+            locals_buf = jnp.zeros((M, layout.P), store_dtype)
+            ring = [store(layout.pack(w0))] + [None] * M
+            cons_snaps, cohort_snaps, traces = [], [], []
+            rs = rc = None
+            if with_state:
+                rs = jnp.zeros(K, jnp.float32)
+                rc = jnp.zeros(K, jnp.float32)
+
+            def make_flat_body(locals_buf):
+                # same pop / slot-migration / re-schedule arithmetic as
+                # the pytree body; in fused mode the cohort stack leaves
+                # the carry and aggregation streams per-RSU afterwards
+                # (fresh body per segment — locals_buf rebinds per wave)
+                def body(carry, r):
+                    if fused_chain:
+                        G = None
+                        if with_state:
+                            qt, qdl, qcu, rs, rc = carry
+                        else:
+                            qt, qdl, qcu = carry
+                    elif with_state:
+                        G, qt, qdl, qcu, rs, rc = carry
+                    else:
+                        G, qt, qdl, qcu = carry
+                    flat = jnp.argmin(qt)                       # pop
+                    j = flat // K
+                    i = flat % K
+                    t = qt[j, i]
+                    cu, cl, dl_t = qcu[i], qcl[i], qdl[i]
+                    if fused_chain:
+                        if scheme == "mafl":
+                            weight = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
+                        else:
+                            weight = jnp.float32(1.0)
+                        new_row = None
+                    else:
+                        grow = G[j]
+                        new_row, weight = aggregate(grow, locals_buf[r], t,
+                                                    cu, cl, dl_t)
+                        G = G.at[j].set(new_row)
+                    if with_state:
+                        rew = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
+                        rs = rs.at[i].add(rew)
+                        rc = rc.at[i].add(1.0)
+                    t_up = t + cl
+                    cu_new = eq36_upload_delay(gains, x0, i, t_up)
+                    t_new = t_up + cu_new
+                    x_new = jnp.mod(x0[i] + v_c * t_new + span / 2.0,
+                                    span) - span / 2.0
+                    j_new = serving(x_new)              # handover target
+                    if sel_active:
+                        t_new = jnp.where(adm_tab[r, i], t_new, jnp.inf)
+                    qt = qt.at[j, i].set(jnp.inf)
+                    qt = qt.at[j_new, i].set(t_new)
+                    qdl = qdl.at[i].set(t)
+                    qcu = qcu.at[i].set(cu_new)
+                    if fused_chain:
+                        out = ((qt, qdl, qcu, rs, rc) if with_state
+                               else (qt, qdl, qcu))
+                        return out, (i, j, t, cu, cl, dl_t, weight)
+                    out = ((G, qt, qdl, qcu, rs, rc) if with_state
+                           else (G, qt, qdl, qcu))
+                    return out, (i, j, t, cu, cl, dl_t, weight, new_row)
+                return body
+
+            def readmit(qt, qdl, qcu, A, t_b):
+                A = jnp.asarray(A)
+                t_up = t_b + qcl[A]
+                cu_new = eq36_upload_delay(gains, x0, A, t_up)
+                t_new = t_up + cu_new
+                x_new = jnp.mod(x0[A] + v_c * t_new + span / 2.0,
+                                span) - span / 2.0
+                j_new = serving(x_new)
+                return (qt.at[j_new, A].set(t_new), qdl.at[A].set(t_b),
+                        qcu.at[A].set(cu_new))
+
+            for T, s, e in plan.waves:
+                T = np.asarray(T, np.int32)
+                if len(T):
+                    pay_rounds = [int(x) for x in d[T] + 1]
+                    shared = all(pr == pay_rounds[0] for pr in pay_rounds)
+                    if shared:
+                        pay = layout.unpack(ring[pay_rounds[0]])
+                    else:
+                        pay = layout.unpack(jnp.stack(
+                            [ring[pr] for pr in pay_rounds]))
+                    train = _wave_train(local_scan, mesh, len(T), shared)
+                    loc, _ = train(pay, imgs[T], labs[T], lr)
+                    locals_buf = locals_buf.at[jnp.asarray(T)].set(
+                        layout.pack(loc, dtype=store_dtype))
+                points = sorted({b for b in range(s + 1, e + 1)
+                                 if b in eval_set or b in reconcile_set
+                                 or b in readmit_at}
+                                | {e})
+                a = s
+                for b in points:
+                    if b > a:
+                        if fused_chain:
+                            st = ((qt, qdl, qcu, rs, rc) if with_state
+                                  else (qt, qdl, qcu))
+                        else:
+                            st = ((G, qt, qdl, qcu, rs, rc) if with_state
+                                  else (G, qt, qdl, qcu))
+                        st, ys = jax.lax.scan(make_flat_body(locals_buf),
+                                              st, jnp.arange(a, b))
+                        if fused_chain:
+                            if with_state:
+                                qt, qdl, qcu, rs, rc = st
+                            else:
+                                qt, qdl, qcu = st
+                        elif with_state:
+                            G, qt, qdl, qcu, rs, rc = st
+                        else:
+                            G, qt, qdl, qcu = st
+                        traces.append(ys[:7])
+                        if fused_chain:
+                            # per-RSU streaming chains (DESIGN.md §12):
+                            # coefficients from the segment's own f32
+                            # trace, one ring_agg per checkpoint chunk
+                            cc, dd = chain_coeffs(
+                                scheme, interpretation, p.beta, ys[6],
+                                t=ys[2], dl_t=ys[5],
+                                fedasync_mix=fedasync_mix)
+                            coeffs = jnp.stack([cc, dd], axis=1)
+                            for jr, chunks in rsu_chain_groups(
+                                    plan, a, b, needed):
+                                g_j = G[jr]
+                                for chunk in chunks:
+                                    idx = np.asarray(chunk)
+                                    g_j = agg_ops.ring_agg(
+                                        g_j, locals_buf[jnp.asarray(idx)],
+                                        coeffs[jnp.asarray(idx - a)],
+                                        interpret=ring_interp)
+                                    last = chunk[-1] + 1
+                                    if last in needed:
+                                        ring[last] = store(g_j)
+                                G = G.at[jr].set(g_j)
+                        else:
+                            rows = ys[7]
+                            for r in range(a, b):
+                                ring[r + 1] = store(rows[r - a])
+                    if b in reconcile_set:
+                        G = mix_rows(G, stack_mean(G))
+                        ring[b] = store(G[int(up_rsu[b - 1])])
+                    if b in readmit_at:
+                        qt, qdl, qcu = readmit(qt, qdl, qcu, readmit_at[b],
+                                               traces[-1][2][-1])
+                    if b in eval_set:
+                        cons_snaps.append(layout.unpack(
+                            jnp.mean(G, axis=0)))
+                        if record_cohorts:
+                            cohort_snaps.append(layout.unpack(G))
+                    a = b
+
+            trace = tuple(jnp.concatenate([tr[k] for tr in traces])
+                          for k in range(7))
+            if with_state:
+                return layout.unpack(G), cons_snaps, cohort_snaps, trace, \
+                    (rs, rc)
+            return layout.unpack(G), cons_snaps, cohort_snaps, trace
+
+        return jax.jit(program_flat)
+
     def program(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, lr):
         local_scan = client_mod._local_scan
         G = jax.tree_util.tree_map(
@@ -377,15 +584,7 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             arrival time."""
             A = jnp.asarray(A)
             t_up = t_b + qcl[A]
-            slot = jnp.clip(t_up.astype(jnp.int32), 0, n_slots - 1)
-            gain = gains[slot, A]
-            dx = x0[A] + v_c * t_up
-            x_up = jnp.mod(dx + span / 2.0, span) - span / 2.0
-            j_up = serving(x_up)
-            dist = jnp.sqrt((x_up - centers[j_up]) ** 2 + dy2H2)
-            snr = pm * gain * dist ** (-alpha_pl) / sigma2
-            rate = bw * jnp.log2(1.0 + snr)
-            cu_new = bits / jnp.maximum(rate, 1e-12)
+            cu_new = eq36_upload_delay(gains, x0, A, t_up)
             t_new = t_up + cu_new
             x_new = jnp.mod(x0[A] + v_c * t_new + span / 2.0,
                             span) - span / 2.0
@@ -413,7 +612,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             # static — the reconcile and the consensus snapshot run at
             # trace level *between* scans (no collective under lax.cond)
             points = sorted({b for b in range(s + 1, e + 1)
-                             if b in eval_set or b in reconcile_set}
+                             if b in eval_set or b in reconcile_set
+                             or b in readmit_at}
                             | {e})
             a = s
             for b in points:
@@ -479,10 +679,17 @@ def run_corridor_simulation(
     record_cohorts: bool = False,
     init_params=None,
     selection=None,
+    flat: Optional[bool] = None,
 ):
     """Run ``sc.rounds`` corridor arrivals entirely on device; returns the
     same ``SimResult`` the serial reference produces (same record fields,
     same eval cadence, per-RSU round numbering, ``rec.rsu`` set).
+
+    ``flat=None`` auto-selects the packed flat-parameter fast path
+    (DESIGN.md §12) whenever the run is unsharded; an ``"rsu"``-sharded
+    mesh keeps the pytree layout (explicitly requesting both raises).
+    ``sc.ring_dtype="bf16"`` (flat only) stores ring rows and upload
+    buffers in bf16 around the f32 cohort stack.
 
     ``result.extras`` carries the corridor-specific outputs: the per-round
     serving-RSU trace, the final cohort stack, and (``record_cohorts=True``)
@@ -510,6 +717,22 @@ def run_corridor_simulation(
         raise ValueError("rounds must be >= 1")
     R = sc.n_rsus
     entry = getattr(sc, "corridor_entry", "uniform")
+    ring_dtype = getattr(sc, "ring_dtype", "f32")
+    if ring_dtype not in ("f32", "bf16"):
+        raise ValueError(f"unknown ring_dtype {ring_dtype!r}; "
+                         "expected 'f32' or 'bf16'")
+    sharded = _rsu_shards(mesh, R) > 1
+    if flat is None:
+        flat = not sharded
+    elif flat and sharded:
+        raise ValueError(
+            "flat fast path does not run under an 'rsu'-sharded mesh — "
+            "the sharded cohort stack keeps the pytree layout (pass "
+            "flat=False or drop the mesh)")
+    if ring_dtype == "bf16" and not flat:
+        raise ValueError("ring_dtype='bf16' requires the flat fast path "
+                         "(unsharded corridor): only the packed ring "
+                         "stores bf16 snapshots around the f32 stack")
 
     plan = plan_corridor(p, R, seed, rounds, entry=entry, selection=spec,
                          reconcile_every=sc.reconcile_every)
@@ -543,6 +766,8 @@ def run_corridor_simulation(
     qcu = jnp.asarray(plan.q0["upload_delay"], jnp.float32)
     qcl = jnp.asarray(plan.q0["train_delay"], jnp.float32)
 
+    from repro.core.flat import ParamLayout
+    layout = ParamLayout.from_tree(w0) if flat else None
     shapes = (imgs.shape, tuple(
         (str(path), v.shape, str(v.dtype))
         for path, v in jax.tree_util.tree_leaves_with_path(w0)))
@@ -553,7 +778,8 @@ def run_corridor_simulation(
                  sc.reconcile_every, eval_rounds, record_cohorts,
                  _mesh_key(mesh), shapes,
                  None if plan.sel is None else plan.sel.signature(),
-                 client_mod._local_scan)
+                 client_mod._local_scan,
+                 None if layout is None else layout.signature(), ring_dtype)
     prog = _PROGRAM_CACHE.get(cache_key)
     if prog is None:
         prog = _build_program(
@@ -562,7 +788,8 @@ def run_corridor_simulation(
             reconcile_every=sc.reconcile_every, reconcile_mode=mode,
             reconcile_tau=float(getattr(sc, "reconcile_tau", 0.5)),
             eval_rounds=eval_rounds, fedasync_mix=DEFAULT_FEDASYNC_MIX,
-            record_cohorts=record_cohorts)
+            record_cohorts=record_cohorts, flat_layout=layout,
+            ring_dtype=ring_dtype)
         _PROGRAM_CACHE[cache_key] = prog
         while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
             _PROGRAM_CACHE.popitem(last=False)
@@ -617,6 +844,16 @@ def run_corridor_simulation(
                 "corridor engine: device bandit reward accumulators "
                 "diverged from the host selection replay")
 
+    if flat and ring_dtype == "bf16":
+        # bf16 divergence guard (DESIGN.md §12): the trace guards above
+        # keep the timeline exact; a non-finite cohort stack means the
+        # quantized ring diverged — fail loudly
+        if not all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree_util.tree_leaves(G)):
+            raise RuntimeError(
+                "corridor engine: non-finite cohort stack under "
+                "ring_dtype='bf16' — the quantized snapshot ring diverged "
+                "(rerun with ring_dtype='f32' to bisect)")
     result = SimResult(scheme=f"{scheme}+corridor", rounds=[],
                        acc_history=[], loss_history=[])
     per_rsu_round = np.zeros(R, np.int64)

@@ -144,3 +144,33 @@ def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
                         sel=None if sel is None else sel.plan(),
                         sel_bandit=None if sel is None
                         else sel.bandit_expectation())
+
+
+def rsu_chain_groups(plan: CorridorPlan, s: int, e: int,
+                     needed) -> list:
+    """Static per-RSU upload chains for scan segment ``[s, e)`` — the flat
+    fast path's fused-aggregation plan (DESIGN.md §12).
+
+    Within a segment the uploads landing on RSU ``j`` form one sequential
+    mix chain on cohort row ``j`` (uploads to other RSUs never touch it),
+    so a whole segment aggregates as one ``ring_agg`` chain per active
+    RSU.  Each chain is split at the rounds in ``needed`` whose ring row a
+    later wave reads (``ring[r+1]`` is the post-upload row of
+    ``up_rsu[r]``).  Returns ``[(j, [chunk, ...]), ...]`` where each chunk
+    is a list of round indices and every chunk boundary except possibly
+    the last must materialize a snapshot."""
+    groups = []
+    for j in range(plan.n_rsus):
+        rounds_j = [r for r in range(s, e) if int(plan.up_rsu[r]) == j]
+        if not rounds_j:
+            continue
+        chunks, cur = [], []
+        for r in rounds_j:
+            cur.append(r)
+            if r + 1 in needed:
+                chunks.append(cur)
+                cur = []
+        if cur:
+            chunks.append(cur)
+        groups.append((j, chunks))
+    return groups

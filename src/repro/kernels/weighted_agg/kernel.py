@@ -18,6 +18,7 @@ from jax.experimental import pallas as pl
 
 LANE = 128
 DEFAULT_BLOCK_ROWS = 256        # 256 x 128 x 4B = 128 KiB per operand tile
+DEFAULT_BLOCK_U = 8             # uploads per grid step of the fused chain
 
 
 def _agg_kernel(scal_ref, g_ref, l_ref, o_ref):
@@ -54,3 +55,67 @@ def weighted_agg_2d(g, l, scalars, *, block_rows=DEFAULT_BLOCK_ROWS,
         out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
         interpret=interpret,
     )(scalars, g, l)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-upload chain: U staleness-weighted mixes in one streaming pass
+# ---------------------------------------------------------------------------
+def _make_ring_kernel(block_u: int, U: int):
+    def _ring_kernel(coef_ref, g_ref, l_ref, o_ref):
+        ub = pl.program_id(1)
+
+        @pl.when(ub == 0)
+        def _():
+            # first upload chunk of this row tile: seed the accumulator
+            # with the global model (f32 master)
+            o_ref[...] = g_ref[...].astype(jnp.float32)
+
+        def body(j, acc):
+            c = coef_ref[j, 0]
+            d = coef_ref[j, 1]
+            l = l_ref[j].astype(jnp.float32)
+            new = c * acc + d * l
+            # ragged final chunk: steps past U are identity (masked, not
+            # coeff-padded — 1*acc + 0*l would rewrite -0.0 to +0.0)
+            return jnp.where(ub * block_u + j < U, new, acc)
+
+        o_ref[...] = jax.lax.fori_loop(0, block_u, body, o_ref[...])
+    return _ring_kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "block_u", "interpret"))
+def ring_agg_2d(g, locs, coeffs, *, block_rows=DEFAULT_BLOCK_ROWS,
+                block_u=DEFAULT_BLOCK_U, interpret=None):
+    """g: [R, 128]; locs: [U, R, 128] (f32 or bf16); coeffs: f32[U, 2].
+
+    Applies the U-upload mix chain ``acc <- c_u*acc + d_u*locs[u]`` with an
+    f32 accumulator that lives in the output tile across upload chunks:
+    grid = (row tiles, upload chunks) with the upload axis innermost, so
+    each row tile of the global model is read ONCE and each local is read
+    once — ``(U+2)·P`` total traffic for the whole chain instead of the
+    ``3·U·P`` of U separate two-operand passes.  The cross-chunk
+    accumulation through ``o_ref`` assumes grid steps execute
+    *sequentially* (TPU and the interpreter do; GPU grid cells are
+    parallel blocks and would race) — ``ops.ring_agg`` only selects the
+    compiled kernel on TPU for that reason.  Sequential evaluation
+    order per element keeps the f32 path bitwise against chained
+    ``weighted_agg`` calls (see ``ref.ring_agg``).  Output is f32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    U, R = locs.shape[0], g.shape[0]
+    assert locs.shape[1:] == g.shape and coeffs.shape == (U, 2)
+    br = min(block_rows, R)
+    bu = min(block_u, U)
+    return pl.pallas_call(
+        _make_ring_kernel(bu, U),
+        grid=(pl.cdiv(R, br), pl.cdiv(U, bu)),
+        in_specs=[
+            pl.BlockSpec((bu, 2), lambda i, u: (u, 0)),
+            pl.BlockSpec((br, LANE), lambda i, u: (i, 0)),
+            pl.BlockSpec((bu, br, LANE), lambda i, u: (u, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANE), lambda i, u: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(g.shape, jnp.float32),
+        interpret=interpret,
+    )(coeffs, g, locs)

@@ -1,12 +1,16 @@
-"""Jit'd public wrapper: applies the fused aggregation kernel to arbitrary
-pytrees by flattening every leaf into lane-aligned (R, 128) tiles.
+"""Jit'd public wrappers: the fused aggregation kernels applied to arbitrary
+pytrees (``weighted_agg_tree``) and to packed flat buffers (``ring_agg``,
+DESIGN.md §12) by tiling into lane-aligned (R, 128) blocks.
 
 ``interpret=None`` (default) picks the execution mode per backend — the
 Pallas interpreter on CPU, a compiled VMEM-tiled streaming kernel on
 TPU/GPU (the hardcoded ``interpret=True`` default used to force the
 interpreter even on accelerators).  Leaves too small to tile (< 128
 elements) fall through to the jnp oracle — the traffic they contribute is
-negligible.
+negligible.  Ragged leaves are zero-padded up to the next full lane row and
+run through the tiled kernel in one call (the padded slice of the output is
+dropped); the old path computed the remainder with the jnp oracle and
+``jnp.concatenate``d it back, which re-copied the whole leaf.
 """
 from __future__ import annotations
 
@@ -15,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.weighted_agg import ref
-from repro.kernels.weighted_agg.kernel import LANE, weighted_agg_2d
+from repro.kernels.weighted_agg.kernel import (LANE, ring_agg_2d,
+                                               weighted_agg_2d)
 
 
 def weighted_agg_leaf(g, l, beta: float, weight: float, interpret=None):
@@ -23,16 +28,19 @@ def weighted_agg_leaf(g, l, beta: float, weight: float, interpret=None):
         return ref.weighted_agg(g, l, beta, weight)
     scalars = jnp.asarray([[beta, weight]], jnp.float32)
     n = g.size
-    rows = n // LANE
-    main = rows * LANE
+    rows = -(-n // LANE)
+    pad = rows * LANE - n
     gf, lf = g.reshape(-1), l.reshape(-1)
-    out_main = weighted_agg_2d(gf[:main].reshape(rows, LANE),
-                               lf[:main].reshape(rows, LANE), scalars,
-                               interpret=interpret).reshape(-1)
-    if main == n:
-        return out_main.reshape(g.shape)
-    tail = ref.weighted_agg(gf[main:], lf[main:], beta, weight)
-    return jnp.concatenate([out_main, tail]).reshape(g.shape)
+    if pad:
+        # pad the ragged tail into the last tile row; beta*0+(1-beta)*w*0
+        # keeps the pad lanes finite and the slice below drops them
+        gf = jnp.pad(gf, (0, pad))
+        lf = jnp.pad(lf, (0, pad))
+    out = weighted_agg_2d(gf.reshape(rows, LANE), lf.reshape(rows, LANE),
+                          scalars, interpret=interpret).reshape(-1)
+    if pad:
+        out = out[:n]
+    return out.reshape(g.shape)
 
 
 def weighted_agg_tree(global_params, local_params, beta: float,
@@ -41,3 +49,54 @@ def weighted_agg_tree(global_params, local_params, beta: float,
     return jax.tree_util.tree_map(
         lambda g, l: weighted_agg_leaf(g, l, beta, weight, interpret),
         global_params, local_params)
+
+
+def ring_agg(g, locs, coeffs, interpret=None):
+    """Fused multi-upload chain over packed flat buffers (DESIGN.md §12).
+
+    ``g``: ``[P]`` with P a multiple of 128 (a ``ParamLayout`` buffer);
+    ``locs``: ``[U, P]`` f32/bf16 upload rows; ``coeffs``: ``f32[U, 2]``
+    per-upload ``(c, d)`` mix pairs.  Semantics are exactly
+    ``ref.ring_agg`` (U sequential mixes, f32 accumulation — bitwise equal
+    to U separate ``mix_update`` passes); this wrapper is the one-pass
+    streaming execution of it.
+
+    ``interpret=None`` resolves by backend: the compiled Pallas kernel
+    only on TPU — its upload-chunk accumulation revisits the output tile
+    across grid steps, which requires the *sequential* grid execution TPU
+    (and the interpreter) guarantee; GPU grid cells are parallel blocks,
+    so GPU and CPU get the jnp chain (same arithmetic, one lax.scan
+    pass).  Pass ``interpret=True/False`` to force the Pallas kernel in
+    either mode (parity is pinned by ``tests/test_flat.py``)."""
+    U = locs.shape[0]
+    if U == 0:
+        return g.astype(jnp.float32)
+    assert g.shape[-1] % LANE == 0, \
+        f"ring_agg needs a lane-aligned buffer, got P={g.shape[-1]}"
+    if interpret is None and jax.default_backend() != "tpu":
+        return ref.ring_agg(g, locs, coeffs)
+    rows = g.shape[-1] // LANE
+    out = ring_agg_2d(g.reshape(rows, LANE),
+                      locs.reshape(U, rows, LANE), coeffs,
+                      interpret=interpret)
+    return out.reshape(-1)
+
+
+def prefix_weights(coeffs) -> np.ndarray:
+    """The chain's closed form: weights ``w[U+1]`` (f64) such that
+
+        ring_agg(g, locs, coeffs) ~= w[0]*g + sum_u w[1+u]*locs[u]
+
+    with ``w[0] = prod_u c_u`` and ``w[1+u] = d_u * prod_{v>u} c_v`` — the
+    prefix-weight algebra the f64 host planner exposes (DESIGN.md §12).
+    Equality is algebraic, not bitwise: evaluating this form reassociates
+    the f32 arithmetic, which is why the kernels evaluate sequentially."""
+    c = np.asarray(coeffs, np.float64)
+    U = c.shape[0]
+    w = np.empty(U + 1)
+    suffix = 1.0
+    for u in range(U - 1, -1, -1):
+        w[1 + u] = c[u, 1] * suffix
+        suffix *= c[u, 0]
+    w[0] = suffix
+    return w

@@ -18,3 +18,27 @@ def weighted_agg_tree(global_params, local_params, beta: float,
     return jax.tree_util.tree_map(
         lambda g, l: weighted_agg(g, l, beta, weight), global_params,
         local_params)
+
+
+def ring_agg(g, locs, coeffs):
+    """Fused multi-upload chain, pure-jnp form (also the CPU fast path).
+
+    ``g``: ``[P]`` (any float dtype, accumulated in f32); ``locs``:
+    ``[U, P]``; ``coeffs``: ``f32[U, 2]`` of per-upload ``(c, d)`` pairs.
+    Applies the U mixes *sequentially*::
+
+        acc <- c_u * acc + d_u * locs[u]        (f32)
+
+    which is bitwise identical to U separate ``mix_update`` /
+    ``literal_update`` passes in f32 — the property that lets the flat
+    engines stay pinned by the PR-4 golden traces.  Algebraically it equals
+    the prefix-weight linear combination (``aggregation.prefix_weights``),
+    but evaluating *that* would reassociate the f32 arithmetic.  Returns
+    f32 (the master-weight dtype)."""
+
+    def step(acc, cl):
+        c, l = cl
+        return c[0] * acc + c[1] * l.astype(jnp.float32), None
+
+    acc, _ = jax.lax.scan(step, g.astype(jnp.float32), (coeffs, locs))
+    return acc

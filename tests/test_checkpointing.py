@@ -111,6 +111,52 @@ def test_mid_simulation_resume_restores_global_model_bit_exact(tmp_path):
 # ---------------------------------------------------------------------------
 # FedBuff partial-buffer edge cases
 # ---------------------------------------------------------------------------
+def test_flat_checkpoint_roundtrip_f32(tmp_path):
+    """Flat-buffer checkpoint (DESIGN.md §12): buffer + layout round-trip
+    bit-exactly and the restored layout unpacks without a template."""
+    from repro.checkpointing import load_flat_checkpoint, save_flat_checkpoint
+    from repro.core.flat import ParamLayout
+    params = init_cnn(jax.random.PRNGKey(2))
+    layout = ParamLayout.from_tree(params)
+    flat = layout.pack(params)
+    path = save_flat_checkpoint(str(tmp_path), 7, flat, layout,
+                                meta={"round": 7})
+    flat2, layout2 = load_flat_checkpoint(path)
+    assert layout2 == layout
+    np.testing.assert_array_equal(np.asarray(flat), flat2)
+    restored = layout2.unpack(jnp.asarray(flat2))
+    assert tree_digest(restored) == tree_digest(params)
+
+
+def test_flat_checkpoint_roundtrip_bf16(tmp_path):
+    """The bf16 ring rows round-trip bit-exactly through the ::bf16 npz
+    view mechanism."""
+    from repro.checkpointing import load_flat_checkpoint, save_flat_checkpoint
+    from repro.core.flat import ParamLayout
+    params = init_cnn(jax.random.PRNGKey(3))
+    layout = ParamLayout.from_tree(params)
+    flat = layout.pack(params, dtype=jnp.bfloat16)
+    path = save_flat_checkpoint(str(tmp_path), 1, flat, layout)
+    flat2, layout2 = load_flat_checkpoint(path)
+    assert str(np.asarray(flat2).dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(flat).view(np.uint16),
+                                  np.asarray(flat2).view(np.uint16))
+    assert layout2.P == layout.P
+
+
+def test_flat_checkpoint_shares_retention_with_pytree(tmp_path):
+    from repro.checkpointing import save_flat_checkpoint
+    from repro.core.flat import ParamLayout
+    params = init_cnn(jax.random.PRNGKey(0))
+    layout = ParamLayout.from_tree(params)
+    flat = layout.pack(params)
+    for step in range(4):
+        save_flat_checkpoint(str(tmp_path), step, flat, layout, keep=2)
+    kept = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert kept == ["ckpt_00000002.npz", "ckpt_00000003.npz"]
+    assert latest_checkpoint(str(tmp_path)).endswith("ckpt_00000003.npz")
+
+
 def _tree(val):
     return {"a": np.full((3,), val, np.float32),
             "b": np.full((2, 2), val * 2.0, np.float32)}

@@ -1,0 +1,267 @@
+"""Flat-parameter fast-path unit tests (DESIGN.md §12):
+
+- ``ParamLayout`` pack/unpack round-trip property tests (bitwise, batch
+  axes, lane alignment, bf16 cast behavior, json serialization);
+- ``ring_agg`` vs sequential ``mix_update`` parity across U, dtypes, and
+  interpret/compiled modes;
+- the prefix-weight algebra (``ops.prefix_weights``) against the chain;
+- ``chain_coeffs`` against the engines' per-scheme mix expressions;
+- the ``weighted_agg_leaf`` padded-tail path (satellite: no more
+  jnp-oracle + concatenate remainder).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.aggregation import chain_coeffs, mix_update_donated
+from repro.core.flat import LANE, ParamLayout
+from repro.kernels.weighted_agg import ops as agg_ops, ref as agg_ref
+from repro.models.cnn import init_cnn
+
+
+def _tree(seed=0):
+    return init_cnn(jax.random.PRNGKey(seed))
+
+
+# ---------------------------------------------------------------------------
+# ParamLayout
+# ---------------------------------------------------------------------------
+def test_layout_offsets_lane_aligned_and_disjoint():
+    lay = ParamLayout.from_tree(_tree())
+    assert lay.P % LANE == 0
+    prev_end = 0
+    for off, size in zip(lay.offsets, lay.sizes):
+        assert off % LANE == 0, "leaf offsets must be lane-aligned"
+        assert off >= prev_end, "leaf slices must not overlap"
+        prev_end = off + size
+    assert lay.P >= prev_end
+
+
+def test_pack_unpack_bitwise_roundtrip():
+    w = _tree()
+    lay = ParamLayout.from_tree(w)
+    back = lay.unpack(lay.pack(w))
+    for k in w:
+        assert np.array_equal(np.asarray(w[k]), np.asarray(back[k])), k
+        assert back[k].dtype == w[k].dtype
+
+
+def test_pack_unpack_batched_roundtrip():
+    w = _tree()
+    lay = ParamLayout.from_tree(w)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x, 2.0 * x, -x]), w)
+    buf = lay.pack(stacked)
+    assert buf.shape == (3, lay.P)
+    back = lay.unpack(buf)
+    for k in w:
+        assert np.array_equal(np.asarray(stacked[k]), np.asarray(back[k]))
+
+
+def test_pack_pads_gaps_with_zeros():
+    w = _tree()
+    lay = ParamLayout.from_tree(w)
+    buf = np.asarray(lay.pack(w))
+    mask = np.zeros(lay.P, bool)
+    for off, size in zip(lay.offsets, lay.sizes):
+        mask[off:off + size] = True
+    assert np.all(buf[~mask] == 0.0)
+
+
+def test_bf16_pack_unpack_casts_back_to_template_dtype():
+    w = _tree()
+    lay = ParamLayout.from_tree(w)
+    buf = lay.pack(w, dtype=jnp.bfloat16)
+    assert buf.dtype == jnp.bfloat16
+    back = lay.unpack(buf)
+    for k in w:
+        assert back[k].dtype == w[k].dtype           # f32 restored
+        expect = np.asarray(w[k].astype(jnp.bfloat16).astype(w[k].dtype))
+        assert np.array_equal(expect, np.asarray(back[k])), k
+
+
+def test_layout_json_roundtrip_unpacks_without_template():
+    w = _tree()
+    lay = ParamLayout.from_tree(w)
+    lay2 = ParamLayout.from_json(lay.to_json())
+    assert lay2 == lay and hash(lay2) == hash(lay)
+    back = lay2.unpack(lay.pack(w))
+    for k in w:
+        assert np.array_equal(np.asarray(w[k]), np.asarray(back[k]))
+
+
+def test_layout_json_roundtrip_list_pytree_many_leaves():
+    """Regression: a list pytree of >=10 leaves restores through json as
+    a canonicalized dict ('0'..'10' keys) with every leaf's DATA intact —
+    dict flattening sorts '10' before '2', which used to scramble the
+    offset columns against the leaf order."""
+    tree = [jnp.full((3,), float(i)) for i in range(11)]
+    lay = ParamLayout.from_tree(tree)
+    lay2 = ParamLayout.from_json(lay.to_json())
+    back = lay2.unpack(lay.pack(tree))
+    assert isinstance(back, dict) and set(back) == {str(i)
+                                                    for i in range(11)}
+    for i in range(11):
+        np.testing.assert_array_equal(np.asarray(back[str(i)]),
+                                      np.asarray(tree[i]))
+
+
+@given(st.integers(1, 5), st.integers(1, 97))
+@settings(max_examples=10, deadline=None)
+def test_layout_roundtrip_property(n_leaves, base):
+    rng = np.random.default_rng(base)
+    tree = {f"p{i}": jnp.asarray(
+        rng.standard_normal((base + i, 1 + (i % 3))).astype(np.float32))
+        for i in range(n_leaves)}
+    lay = ParamLayout.from_tree(tree)
+    assert lay.P % LANE == 0
+    back = lay.unpack(lay.pack(tree))
+    for k in tree:
+        assert np.array_equal(np.asarray(tree[k]), np.asarray(back[k]))
+
+
+# ---------------------------------------------------------------------------
+# ring_agg: fused multi-upload chain
+# ---------------------------------------------------------------------------
+def _chain_inputs(U, P, dtype, seed=0):
+    kg, kl = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(kg, (P,), jnp.float32)
+    locs = jax.random.normal(kl, (U, P)).astype(dtype)
+    alphas = jnp.asarray(np.linspace(0.15, 0.85, U), jnp.float32)
+    coeffs = jnp.stack([1.0 - alphas, alphas], axis=1)
+    return g, locs, coeffs, alphas
+
+
+def _sequential(g, locs, alphas):
+    """U separate mix_update passes — the host/pytree semantics."""
+    out = g
+    for u in range(locs.shape[0]):
+        out = mix_update_donated(out, locs[u].astype(jnp.float32),
+                                 alphas[u])
+    return out
+
+
+@pytest.mark.parametrize("U", [1, 2, 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ring_agg_ref_matches_sequential_mixes(U, dtype):
+    g, locs, coeffs, alphas = _chain_inputs(U, 4 * LANE, dtype)
+    fused = agg_ref.ring_agg(g, locs, coeffs)
+    seq = _sequential(g, locs, alphas)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(seq),
+                               atol=tol, rtol=1e-5)
+    assert fused.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("U", [1, 2, 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ring_agg_pallas_interpret_matches_ref(U, dtype):
+    g, locs, coeffs, _ = _chain_inputs(U, 4 * LANE, dtype)
+    ref_out = agg_ref.ring_agg(g, locs, coeffs)
+    pall = agg_ops.ring_agg(g, locs, coeffs, interpret=True)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(pall), np.asarray(ref_out),
+                               atol=tol, rtol=1e-5)
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="compiled (non-interpret) Pallas needs TPU/GPU")
+@pytest.mark.parametrize("U", [1, 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ring_agg_compiled_matches_ref(U, dtype):
+    g, locs, coeffs, _ = _chain_inputs(U, 4 * LANE, dtype)
+    ref_out = agg_ref.ring_agg(g, locs, coeffs)
+    out = agg_ops.ring_agg(g, locs, coeffs, interpret=False)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=tol, rtol=1e-5)
+
+
+def test_ring_agg_u_tiling_matches_single_block():
+    """The upload-chunked grid (block_u < U) must agree with one chunk —
+    the f32 accumulator lives in the out tile across chunks."""
+    from repro.kernels.weighted_agg.kernel import ring_agg_2d
+    g, locs, coeffs, _ = _chain_inputs(11, 4 * LANE, jnp.float32)
+    rows = g.shape[0] // LANE
+    g2 = g.reshape(rows, LANE)
+    l2 = locs.reshape(11, rows, LANE)
+    one = ring_agg_2d(g2, l2, coeffs, block_u=11, interpret=True)
+    chunked = ring_agg_2d(g2, l2, coeffs, block_u=3, interpret=True)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(chunked))
+
+
+def test_ring_agg_empty_chain_is_identity():
+    g = jnp.arange(2 * LANE, dtype=jnp.float32)
+    out = agg_ops.ring_agg(g, jnp.zeros((0, 2 * LANE)),
+                           jnp.zeros((0, 2), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(g))
+
+
+def test_prefix_weights_algebra():
+    """ring_agg == w[0]*g + sum_u w[1+u]*locs[u] with the planner's f64
+    prefix weights (algebraic identity, to f32 tolerance)."""
+    g, locs, coeffs, _ = _chain_inputs(5, 4 * LANE, jnp.float32)
+    w = agg_ops.prefix_weights(coeffs)
+    lin = w[0] * np.asarray(g, np.float64) + sum(
+        w[1 + u] * np.asarray(locs[u], np.float64) for u in range(5))
+    fused = agg_ref.ring_agg(g, locs, coeffs)
+    np.testing.assert_allclose(np.asarray(fused), lin, atol=1e-5)
+    # conservation: for a pure mixing chain the weights sum to 1
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# chain_coeffs: the engines' per-scheme mix expressions, vectorized
+# ---------------------------------------------------------------------------
+def test_chain_coeffs_mafl_mixing_matches_engine_expr():
+    w = jnp.asarray([0.3, 0.9, 1.4], jnp.float32)     # weights can exceed 1
+    c, d = chain_coeffs("mafl", "mixing", 0.5, w)
+    alpha = np.clip((1.0 - np.float32(0.5)) * np.asarray(w), 0.0, 1.0)
+    np.testing.assert_array_equal(np.asarray(d), alpha)
+    np.testing.assert_array_equal(np.asarray(c), 1.0 - alpha)
+
+
+def test_chain_coeffs_literal_and_afl_and_fedasync():
+    w = jnp.asarray([0.4, 1.1], jnp.float32)
+    c, d = chain_coeffs("mafl", "literal", 0.5, w)
+    np.testing.assert_allclose(np.asarray(c), [0.5, 0.5])
+    np.testing.assert_allclose(np.asarray(d),
+                               0.5 * np.asarray(w), rtol=1e-6)
+    c, d = chain_coeffs("afl", "mixing", 0.5, w)
+    np.testing.assert_allclose(np.asarray(c) + np.asarray(d), 1.0)
+    t = jnp.asarray([5.0, 9.0], jnp.float32)
+    dl = jnp.asarray([1.0, 8.5], jnp.float32)
+    c, d = chain_coeffs("fedasync", "mixing", 0.5, w, t=t, dl_t=dl,
+                        fedasync_mix=0.6)
+    stale = np.maximum(np.asarray(t) - np.asarray(dl), 0.0)
+    np.testing.assert_allclose(np.asarray(d),
+                               0.6 * (stale + 1.0) ** -0.5, rtol=1e-6)
+    with pytest.raises(ValueError):
+        chain_coeffs("fedbuff", "mixing", 0.5, w)
+
+
+# ---------------------------------------------------------------------------
+# weighted_agg_leaf tail handling (satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [LANE + 1, 2 * LANE - 1, 513, 1000])
+def test_weighted_agg_leaf_padded_tail(n):
+    """Ragged leaves now run the tiled kernel over a zero-padded final
+    row (no jnp-oracle remainder, no whole-leaf concatenate); parity with
+    the oracle must hold across the pad boundary."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    l = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    out = agg_ops.weighted_agg_leaf(g, l, 0.45, 1.07)
+    expect = agg_ref.weighted_agg(g, l, 0.45, 1.07)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-6)
+    assert out.shape == g.shape
+
+
+def test_weighted_agg_leaf_small_fallthrough():
+    g = jnp.ones(LANE - 1)
+    l = jnp.full(LANE - 1, 3.0)
+    out = agg_ops.weighted_agg_leaf(g, l, 0.5, 1.0)
+    np.testing.assert_allclose(np.asarray(out), 2.0, atol=1e-6)

@@ -1,0 +1,181 @@
+"""Flat-vs-pytree conformance over the golden traces (DESIGN.md §12).
+
+The packed flat fast path is the device engines' default layout, so the
+golden-trace suite already pins it; this module additionally pins the
+*relationship*: on every golden fixture the flat path must produce the
+bit-identical final model of the legacy pytree path (use_kernel=False,
+admit-all — the configurations where XLA:CPU's context-dependent FMA
+contraction is pinned by the fixtures; see DESIGN.md §12 for why bitwise
+equality across program structures cannot be promised universally on this
+backend).  fedasync / active-selection flat runs are pinned to the pytree
+path at ulp tolerance with exact event traces instead.
+
+Also covers the bf16 ring mode: explicit opt-in, exact timeline, bounded
+accuracy drift, and the host-engine / pytree gates that refuse it.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpointing.checkpoint import tree_digest
+from repro.core.scenarios import run_scenario
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+FIXTURES = ("paper-k10", "highway-k40-handover", "corridor-quick-r2-k8")
+
+
+def _load(name):
+    with open(os.path.join(GOLDEN_DIR, f"{name}.json")) as f:
+        return json.load(f)
+
+
+_RUNS = {}
+
+
+def _run(name, engine, flat, **kw):
+    key = (name, engine, flat, tuple(sorted(kw.items())))
+    if key not in _RUNS:
+        fx = _load(name)
+        _RUNS[key] = run_scenario(name, engine=engine, seed=fx["seed"],
+                                  eval_every=fx["eval_every"], flat=flat,
+                                  **dict(fx["overrides"]), **kw)
+    return _RUNS[key]
+
+
+def _versions_match(fx) -> bool:
+    return fx["versions"] == {"jax": jax.__version__,
+                              "numpy": np.__version__}
+
+
+def _device_engines(name):
+    fx = _load(name)
+    return [e for e in fx["engines"] if e in ("jit", "corridor")]
+
+
+def _trace(r):
+    return [(rec.round, rec.vehicle, rec.rsu, rec.time) for rec in r.rounds]
+
+
+@pytest.mark.parametrize("name,engine", [
+    (n, e) for n in FIXTURES for e in _device_engines(n)])
+def test_flat_bitwise_matches_pytree_on_golden_world(name, engine):
+    fx = _load(name)
+    flat = _run(name, engine, True)
+    pyt = _run(name, engine, False)
+    assert _trace(flat) == _trace(pyt)
+    assert tree_digest(flat.final_params) == tree_digest(pyt.final_params)
+    if _versions_match(fx):
+        # and both equal the committed fixture — the PR-4 goldens pin the
+        # flat path for free
+        assert tree_digest(flat.final_params) == \
+            fx["engines"][engine]["digest"]
+
+
+@pytest.mark.parametrize("name,engine", [
+    ("paper-k10", "jit"), ("corridor-quick-r2-k8", "corridor")])
+def test_flat_admit_all_selection_is_bitwise_noop(name, engine):
+    base = _run(name, engine, True)
+    sel = _run(name, engine, True, selection="admit-all")
+    assert tree_digest(sel.final_params) == tree_digest(base.final_params)
+    assert _trace(sel) == _trace(base)
+
+
+def test_flat_fedasync_matches_pytree_to_ulp_tolerance():
+    """fedasync's staleness coefficient is a pow/mul chain whose FMA
+    contraction XLA:CPU picks per program — exact trace, ulp-level
+    parameter tolerance (DESIGN.md §12)."""
+    a = run_scenario("quick-k5", engine="jit", seed=1, eval_every=4,
+                     rounds=12, scheme="fedasync", flat=False)
+    b = run_scenario("quick-k5", engine="jit", seed=1, eval_every=4,
+                     rounds=12, scheme="fedasync", flat=True)
+    assert _trace(a) == _trace(b)
+    for k in a.final_params:
+        np.testing.assert_allclose(
+            np.asarray(a.final_params[k]), np.asarray(b.final_params[k]),
+            rtol=2e-6, atol=1e-7, err_msg=k)
+
+
+def test_flat_selection_matches_pytree_to_ulp_tolerance():
+    a = run_scenario("quick-k5", engine="jit", seed=1, eval_every=4,
+                     rounds=12, selection="weighted-topk", selection_k=3,
+                     resel_every=4, flat=False)
+    b = run_scenario("quick-k5", engine="jit", seed=1, eval_every=4,
+                     rounds=12, selection="weighted-topk", selection_k=3,
+                     resel_every=4, flat=True)
+    assert _trace(a) == _trace(b)
+    assert a.extras["selection"] == b.extras["selection"]
+    for k in a.final_params:
+        np.testing.assert_allclose(
+            np.asarray(a.final_params[k]), np.asarray(b.final_params[k]),
+            rtol=2e-6, atol=1e-7, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# bf16 ring mode
+# ---------------------------------------------------------------------------
+def test_bf16_ring_exact_timeline_bounded_drift_jit():
+    f32 = run_scenario("quick-k5", engine="jit", seed=1, eval_every=4,
+                       rounds=12)
+    b16 = run_scenario("quick-k5", engine="jit", seed=1, eval_every=4,
+                       rounds=12, ring_dtype="bf16")
+    assert _trace(f32) == _trace(b16)        # timeline never sees params
+    assert abs(f32.final_accuracy() - b16.final_accuracy()) <= 0.05
+    for k in f32.final_params:
+        np.testing.assert_allclose(
+            np.asarray(f32.final_params[k]),
+            np.asarray(b16.final_params[k]), atol=3e-2, err_msg=k)
+
+
+def test_bf16_ring_exact_timeline_bounded_drift_corridor():
+    f32 = run_scenario("corridor-quick-r2-k8", engine="corridor", seed=0,
+                       eval_every=4)
+    b16 = run_scenario("corridor-quick-r2-k8", engine="corridor", seed=0,
+                       eval_every=4, ring_dtype="bf16")
+    assert _trace(f32) == _trace(b16)
+    assert abs(f32.final_accuracy() - b16.final_accuracy()) <= 0.05
+
+
+def test_bf16_requires_flat_device_engine():
+    with pytest.raises(ValueError, match="bf16"):
+        run_scenario("quick-k5", engine="batched", ring_dtype="bf16")
+    with pytest.raises(ValueError, match="bf16"):
+        run_scenario("quick-k5", engine="serial", ring_dtype="bf16")
+    with pytest.raises(ValueError, match="flat"):
+        run_scenario("quick-k5", engine="jit", ring_dtype="bf16",
+                     flat=False)
+
+
+def test_fleet_k10000_scenario_registered_with_bf16_ring():
+    from repro.core.scenarios import get_scenario
+    sc = get_scenario("fleet-k10000")
+    assert sc.K == 10000 and sc.ring_dtype == "bf16"
+
+
+# ---------------------------------------------------------------------------
+# fused-chain variant (use_kernel routes aggregation through ring_agg)
+# ---------------------------------------------------------------------------
+def test_fused_chain_matches_default_to_tolerance():
+    a = run_scenario("quick-k5", engine="jit", seed=1, eval_every=4,
+                     rounds=12)
+    b = run_scenario("quick-k5", engine="jit", seed=1, eval_every=4,
+                     rounds=12, use_kernel=True)
+    assert _trace(a) == _trace(b)
+    for k in a.final_params:
+        np.testing.assert_allclose(
+            np.asarray(a.final_params[k]), np.asarray(b.final_params[k]),
+            rtol=2e-5, atol=1e-5, err_msg=k)
+
+
+def test_fused_chain_matches_default_to_tolerance_corridor():
+    a = run_scenario("corridor-quick-r2-k8", engine="corridor", seed=0,
+                     eval_every=4)
+    b = run_scenario("corridor-quick-r2-k8", engine="corridor", seed=0,
+                     eval_every=4, use_kernel=True)
+    assert _trace(a) == _trace(b)
+    for k in a.final_params:
+        np.testing.assert_allclose(
+            np.asarray(a.final_params[k]), np.asarray(b.final_params[k]),
+            rtol=2e-5, atol=1e-5, err_msg=k)
