@@ -1,0 +1,22 @@
+"""repro.check — static invariant analyzers (DESIGN.md §13).
+
+Three analyzer families guard the contracts the engines rely on but the
+type system cannot see:
+
+- ``pallas_race``: enumerates each registered kernel's grid against its
+  output BlockSpec index maps and classifies it ``parallel-safe`` /
+  ``sequential-axis-required`` / ``racy``; the per-backend legality
+  verdict is what ``repro.kernels.dispatch.select_impl`` consults — there
+  is no hand-maintained backend allowlist.
+- ``boundary``: AST taint pass over the engine modules for host/device
+  boundary leaks (host sync pulls, Python control flow on tracers, np.*
+  on tracers, f64 in traced code, donated-buffer reuse) and the planner
+  duals (no engine imports, no mid-plan precision drops).
+- ``dtype_flow`` / ``plan_shapes``: staged-program probes — jaxpr-level
+  bf16 storage-role verification and cross-seed plan-layout stability.
+
+CLI: ``python -m repro.check src/ [--strict] [--format=json]
+[--list-rules] [--no-probes]``.  Findings can be waived in place with
+``# repro-check: waive[RULE] reason``.
+"""
+from repro.check.findings import RULES, Finding  # noqa: F401

@@ -1,0 +1,5 @@
+import sys
+
+from repro.check.runner import main
+
+sys.exit(main())

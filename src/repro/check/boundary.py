@@ -1,0 +1,660 @@
+"""Host/device boundary lint (DESIGN.md §13, rules BND001-BND005 and
+PLN001-PLN002).
+
+One AST pass per file, in three parts:
+
+**Traced-code rules (BND001-BND004).**  A function is *directly traced* when
+it is structurally handed to a tracer: passed to ``jax.jit`` /
+``jax.lax.scan`` / ``jax.vmap`` / ``shard_map`` / ``pl.pallas_call`` /
+``fori_loop`` / ``while_loop`` / ``cond`` / ``tree_map`` (directly, through
+``functools.partial``, or via a factory call like
+``lax.scan(make_body(...), ...)`` — every def nested in the factory is
+traced), decorated with ``jax.jit`` (bare or through ``partial``), or
+lexically nested in a traced def.  Inside traced defs a light forward taint
+pass tracks which names are tracers — parameters seed the set, ``jnp.*`` /
+``jax.*`` call results and anything derived from tainted values propagate
+it, ``.shape``/``.dtype``/``.ndim``/``.size`` reads drop it — so the rules
+fire on tracers without false-positiving on the engines' trace-time host
+work over static plan tables (``np.asarray(T)`` on closure numpy data,
+``if fused_chain:`` on closure config booleans).
+
+Functions merely *called from* traced code (trace-time helpers like
+``ParamLayout.pack``) get the weak rule set: only BND004 (f64 literal or
+cast), which is wrong at trace level and run level alike, is checked there
+— their parameters may legitimately be static host data, so taint seeding
+would guess wrong.
+
+**Planner rules (PLN001-PLN002).**  The dual contract for the f64 dry-run
+planners (``corridor/plan.py``, ``selection/runtime.py``, ``plan_fleet``):
+no engine/kernel imports, no jnp, no f32 drop mid-plan.
+
+**Donation rule (BND005).**  Call sites of the registered donating updates
+(``mix_update_donated`` etc.) must not read the donated argument afterwards.
+"Afterwards" is structural: later statements of the same block or of any
+enclosing block, plus anywhere in a shared enclosing loop — sibling branches
+of the same ``if`` don't count.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+from repro.check import config
+from repro.check.findings import Finding
+
+NP_ROOTS = {"np", "numpy"}
+TRACER_ROOTS = {"jnp", "jax", "lax", "pl", "pltpu"}
+SHAPE_ATTRS = {"shape", "dtype", "ndim", "size"}
+SCALAR_PULLS = {"float", "int", "bool", "complex"}
+F64_STRINGS = {"float64", "f8", ">f8", "<f8"}
+F32_STRINGS = {"float32", "f4", ">f4", "<f4"}
+
+# callables whose function-valued argument positions mark traced defs
+_TRACE_ENTRY_ARGS = {
+    "jit": (0,), "scan": (0,), "vmap": (0,), "pmap": (0,),
+    "shard_map": (0,), "pallas_call": (0,), "tree_map": (0,),
+    "fori_loop": (2,), "while_loop": (0, 1), "cond": (1, 2),
+    "checkpoint": (0,), "remat": (0,), "grad": (0,),
+    "value_and_grad": (0,),
+}
+
+
+def _root_name(node) -> Optional[str]:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _callee_name(func) -> Optional[str]:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _is_partial(func) -> bool:
+    return _callee_name(func) == "partial"
+
+
+HOST_ITER_FUNCS = {"zip", "enumerate", "range", "reversed", "sorted",
+                   "list", "tuple", "items", "keys", "values"}
+
+
+def _const_strs(node) -> tuple:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(el.value for el in node.elts
+                     if isinstance(el, ast.Constant)
+                     and isinstance(el.value, str))
+    return ()
+
+
+def _const_ints(node) -> tuple:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(el.value for el in node.elts
+                     if isinstance(el, ast.Constant)
+                     and isinstance(el.value, int))
+    return ()
+
+
+def _static_spec(call: ast.Call) -> tuple[tuple, tuple]:
+    """(static_argnames, static_argnums) declared on a jit/checkpoint-style
+    call — those parameters are Python values at trace time, not tracers."""
+    names, nums = (), ()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names = _const_strs(kw.value)
+        elif kw.arg == "static_argnums":
+            nums = _const_ints(kw.value)
+    return names, nums
+
+
+def _param_names(fn) -> list:
+    a = fn.args
+    return [arg.arg for arg in [*a.posonlyargs, *a.args, *a.kwonlyargs]]
+
+
+# ---------------------------------------------------------------------------
+# module indexing: parents, defs, scopes
+# ---------------------------------------------------------------------------
+class _Module:
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.parent: dict = {}
+        self.defs: list = []
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.append(node)
+
+    def enclosing_def(self, node):
+        n = self.parent.get(node)
+        while n is not None:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return n
+            n = self.parent.get(n)
+        return None
+
+    def resolve_def(self, name: str, at):
+        """The def a Name refers to: nearest enclosing scope first, then
+        module level, then a unique global match."""
+        scope = self.enclosing_def(at)
+        while scope is not None:
+            for d in self.defs:
+                if d.name == name and self.enclosing_def(d) is scope:
+                    return d
+            scope = self.enclosing_def(scope)
+        mod_level = [d for d in self.defs
+                     if d.name == name and self.enclosing_def(d) is None]
+        if mod_level:
+            return mod_level[0]
+        named = [d for d in self.defs if d.name == name]
+        return named[0] if len(named) == 1 else None
+
+
+# ---------------------------------------------------------------------------
+# marking: directly traced, factory-traced, weakly reachable
+# ---------------------------------------------------------------------------
+def _mark(mod: _Module) -> tuple[dict, set]:
+    """({traced def node: static param names}, weak def nodes).  Lambdas
+    passed to tracers are handled inline by the taint pass (they cannot
+    contain statements).  Parameters declared ``static_argnums`` /
+    ``static_argnames`` at the trace entry are Python values, not tracers,
+    so they are excluded from taint seeding."""
+    traced: dict = {}
+
+    def add(d, statics=()):
+        traced.setdefault(d, set()).update(statics)
+
+    def resolve_statics(d, names, nums):
+        params = _param_names(d)
+        out = set(names)
+        out.update(params[i] for i in nums if i < len(params))
+        return out
+
+    def mark_fn_expr(expr, at, names=(), nums=()):
+        if isinstance(expr, ast.Name):
+            d = mod.resolve_def(expr.id, at)
+            if d is not None:
+                add(d, resolve_statics(d, names, nums))
+        elif isinstance(expr, ast.Call):
+            if _is_partial(expr.func) and expr.args:
+                n2, i2 = _static_spec(expr)
+                mark_fn_expr(expr.args[0], at, (*names, *n2), (*nums, *i2))
+            else:
+                # factory call: every def nested in the factory is traced
+                name = _callee_name(expr.func)
+                d = mod.resolve_def(name, at) if name else None
+                if d is not None:
+                    for sub in ast.walk(d):
+                        if isinstance(sub, ast.FunctionDef) and sub is not d:
+                            add(sub)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            callee = _callee_name(node.func)
+            spots = _TRACE_ENTRY_ARGS.get(callee)
+            if spots:
+                names, nums = _static_spec(node)
+                for i in spots:
+                    if i < len(node.args):
+                        mark_fn_expr(node.args[i], node, names, nums)
+        elif isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if _callee_name(dec) == "jit":
+                    if isinstance(dec, ast.Call):
+                        names, nums = _static_spec(dec)
+                        add(node, resolve_statics(node, names, nums))
+                    else:
+                        add(node)
+                elif (isinstance(dec, ast.Call) and _is_partial(dec.func)
+                        and dec.args
+                        and _callee_name(dec.args[0]) == "jit"):
+                    names, nums = _static_spec(dec)
+                    add(node, resolve_statics(node, names, nums))
+
+    # nesting closure: defs inside traced defs are traced
+    changed = True
+    while changed:
+        changed = False
+        for d in mod.defs:
+            if d in traced:
+                continue
+            enc = mod.enclosing_def(d)
+            if enc is not None and enc in traced:
+                add(d)
+                changed = True
+
+    # weak reachability: defs called from traced (or weak) defs
+    weak: set = set()
+    frontier = list(traced)
+    while frontier:
+        src = frontier.pop()
+        for node in ast.walk(src):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                d = mod.resolve_def(node.func.id, node)
+                if d is not None and d not in traced and d not in weak:
+                    weak.add(d)
+                    frontier.append(d)
+    return traced, weak
+
+
+# ---------------------------------------------------------------------------
+# taint lint over one traced def
+# ---------------------------------------------------------------------------
+class _TaintLint:
+    def __init__(self, mod: _Module, findings: list, traced: set):
+        self.mod = mod
+        self.findings = findings
+        self.traced = traced
+        self.done: set = set()
+
+    def hit(self, rule, node, msg):
+        self.findings.append(Finding(rule, self.mod.path, node.lineno, msg))
+
+    def run_def(self, fn, inherited=()):
+        if fn in self.done:
+            return
+        self.done.add(fn)
+        tainted = set(inherited)
+        statics = self.traced.get(fn) or ()
+        a = fn.args
+        for arg in [*a.posonlyargs, *a.args, *a.kwonlyargs,
+                    *( [a.vararg] if a.vararg else []),
+                    *( [a.kwarg] if a.kwarg else [])]:
+            if arg.arg not in statics:
+                tainted.add(arg.arg)
+        self.block(fn.body, tainted)
+
+    # -- statements --------------------------------------------------------
+    def block(self, stmts, tainted):
+        for s in stmts:
+            self.stmt(s, tainted)
+
+    def assign_target(self, target, t: bool, tainted):
+        if isinstance(target, ast.Name):
+            (tainted.add if t else tainted.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self.assign_target(el, t, tainted)
+        elif isinstance(target, ast.Starred):
+            self.assign_target(target.value, t, tainted)
+        # subscript/attribute targets mutate containers; no name to track
+
+    def stmt(self, s, tainted):
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if s in self.traced:
+                self.run_def(s, inherited=frozenset(tainted))
+            return
+        if isinstance(s, ast.Assign):
+            t = self.taint(s.value, tainted)
+            if (isinstance(s.value, ast.Tuple)
+                    and len(s.targets) == 1
+                    and isinstance(s.targets[0], ast.Tuple)
+                    and len(s.targets[0].elts) == len(s.value.elts)):
+                for tgt, val in zip(s.targets[0].elts, s.value.elts):
+                    self.assign_target(tgt, self.taint(val, tainted),
+                                       tainted)
+            else:
+                for tgt in s.targets:
+                    self.assign_target(tgt, t, tainted)
+        elif isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self.assign_target(s.target, self.taint(s.value, tainted),
+                                   tainted)
+        elif isinstance(s, ast.AugAssign):
+            t = self.taint(s.value, tainted)
+            if isinstance(s.target, ast.Name):
+                if t:
+                    tainted.add(s.target.id)
+        elif isinstance(s, ast.If):
+            if self.taint(s.test, tainted):
+                self.hit("BND002", s.test,
+                         "Python `if` on a tracer-derived predicate")
+            self.block(s.body, tainted)
+            self.block(s.orelse, tainted)
+        elif isinstance(s, ast.While):
+            if self.taint(s.test, tainted):
+                self.hit("BND002", s.test,
+                         "Python `while` on a tracer-derived predicate")
+            self.block(s.body, tainted)
+            self.block(s.body, tainted)
+        elif isinstance(s, ast.For):
+            t = self.taint(s.iter, tainted)
+            host_iter = (isinstance(s.iter, ast.Call)
+                         and _callee_name(s.iter.func) in HOST_ITER_FUNCS)
+            if t and not host_iter:
+                # zip/enumerate/... over tracers is trace-time unrolling of a
+                # static-length container, not a branch on traced values
+                self.hit("BND002", s.iter,
+                         "Python `for` over a tracer-derived iterable")
+            self.assign_target(s.target, t, tainted)
+            self.block(s.body, tainted)
+            self.block(s.body, tainted)
+            self.block(s.orelse, tainted)
+        elif isinstance(s, ast.Assert):
+            if self.taint(s.test, tainted):
+                self.hit("BND002", s.test,
+                         "`assert` on a tracer-derived predicate")
+        elif isinstance(s, (ast.Return, ast.Expr)):
+            if s.value is not None:
+                self.taint(s.value, tainted)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self.taint(item.context_expr, tainted)
+            self.block(s.body, tainted)
+        elif isinstance(s, ast.Try):
+            self.block(s.body, tainted)
+            for h in s.handlers:
+                self.block(h.body, tainted)
+            self.block(s.orelse, tainted)
+            self.block(s.finalbody, tainted)
+        elif isinstance(s, (ast.Delete, ast.Pass, ast.Break, ast.Continue,
+                            ast.Import, ast.ImportFrom, ast.Global,
+                            ast.Nonlocal, ast.Raise)):
+            return
+        else:
+            for child in ast.iter_child_nodes(s):
+                if isinstance(child, ast.expr):
+                    self.taint(child, tainted)
+
+    # -- expressions -------------------------------------------------------
+    def taint(self, e, tainted) -> bool:
+        if e is None:
+            return False
+        if isinstance(e, ast.Constant):
+            if isinstance(e.value, str) and e.value in F64_STRINGS:
+                self.hit("BND004", e, "'float64' dtype string in traced "
+                         "code (device contract is f32)")
+            return False
+        if isinstance(e, ast.Name):
+            return e.id in tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr == "float64":
+                self.hit("BND004", e, "float64 dtype in traced code "
+                         "(device contract is f32)")
+                return False
+            if e.attr in SHAPE_ATTRS:
+                self.taint(e.value, tainted)
+                return False
+            return self.taint(e.value, tainted)
+        if isinstance(e, ast.Subscript):
+            return (self.taint(e.value, tainted)
+                    | self.taint(e.slice, tainted))
+        if isinstance(e, ast.Call):
+            return self.call(e, tainted)
+        if isinstance(e, (ast.BinOp,)):
+            return (self.taint(e.left, tainted)
+                    | self.taint(e.right, tainted))
+        if isinstance(e, ast.UnaryOp):
+            return self.taint(e.operand, tainted)
+        if isinstance(e, ast.BoolOp):
+            return any([self.taint(v, tainted) for v in e.values])
+        if isinstance(e, ast.Compare):
+            res = self.taint(e.left, tainted)
+            for c in e.comparators:
+                res |= self.taint(c, tainted)
+            return res
+        if isinstance(e, ast.IfExp):
+            if self.taint(e.test, tainted):
+                self.hit("BND002", e.test,
+                         "conditional expression on a tracer-derived "
+                         "predicate")
+            return (self.taint(e.body, tainted)
+                    | self.taint(e.orelse, tainted))
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any([self.taint(el, tainted) for el in e.elts])
+        if isinstance(e, ast.Dict):
+            return any([self.taint(v, tainted)
+                        for v in [*e.keys, *e.values] if v is not None])
+        if isinstance(e, ast.Lambda):
+            inner = set(tainted)
+            for arg in [*e.args.posonlyargs, *e.args.args,
+                        *e.args.kwonlyargs]:
+                inner.add(arg.arg)
+            return self.taint(e.body, inner)
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                          ast.DictComp)):
+            inner = set(tainted)
+            for gen in e.generators:
+                self.assign_target(gen.target,
+                                   self.taint(gen.iter, inner), inner)
+                for cond in gen.ifs:
+                    self.taint(cond, inner)
+            if isinstance(e, ast.DictComp):
+                return (self.taint(e.key, inner)
+                        | self.taint(e.value, inner))
+            return self.taint(e.elt, inner)
+        if isinstance(e, ast.Starred):
+            return self.taint(e.value, tainted)
+        if isinstance(e, ast.JoinedStr):
+            for v in e.values:
+                if isinstance(v, ast.FormattedValue):
+                    self.taint(v.value, tainted)
+            return False
+        if isinstance(e, ast.Slice):
+            return any([self.taint(x, tainted)
+                        for x in (e.lower, e.upper, e.step)
+                        if x is not None])
+        return any([self.taint(c, tainted)
+                    for c in ast.iter_child_nodes(e)
+                    if isinstance(c, ast.expr)])
+
+    def call(self, e, tainted) -> bool:
+        arg_taints = [self.taint(a, tainted) for a in e.args]
+        arg_taints += [self.taint(kw.value, tainted) for kw in e.keywords]
+        any_arg = any(arg_taints)
+        func = e.func
+
+        if isinstance(func, ast.Name) and func.id in SCALAR_PULLS:
+            if any_arg:
+                self.hit("BND003", e,
+                         f"{func.id}() on a tracer forces a host sync")
+            return False
+        if isinstance(func, ast.Attribute):
+            if func.attr in ("item", "tolist"):
+                if self.taint(func.value, tainted):
+                    self.hit("BND003", e,
+                             f".{func.attr}() on a tracer forces a host "
+                             "sync")
+                return False
+            if func.attr == "astype":
+                # the dtype argument was already evaluated above: an
+                # Attribute float64 / 'float64' constant hit BND004 there
+                return self.taint(func.value, tainted)
+
+        root = _root_name(func)
+        if root in NP_ROOTS:
+            if any_arg:
+                self.hit("BND001", e,
+                         "np.* applied to a tracer inside traced code")
+            return False
+        if root in TRACER_ROOTS:
+            return True
+        func_taint = self.taint(func, tainted) \
+            if isinstance(func, (ast.Attribute, ast.Subscript, ast.Call)) \
+            else (isinstance(func, ast.Name) and func.id in tainted)
+        return any_arg or bool(func_taint)
+
+
+def _weak_lint(mod: _Module, fn, findings: list):
+    """BND004 only: an f64 literal/cast is wrong at trace level and run
+    level alike; everything else needs taint context we don't have here."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            findings.append(Finding(
+                "BND004", mod.path, node.lineno,
+                "float64 dtype in trace-time helper (device contract "
+                "is f32)"))
+        elif (isinstance(node, ast.Constant)
+                and isinstance(node.value, str)
+                and node.value in F64_STRINGS):
+            findings.append(Finding(
+                "BND004", mod.path, node.lineno,
+                "'float64' dtype string in trace-time helper (device "
+                "contract is f32)"))
+
+
+# ---------------------------------------------------------------------------
+# planner rules
+# ---------------------------------------------------------------------------
+def _planner_import_ok(module_name: str) -> bool:
+    if not module_name.startswith("repro"):
+        return True
+    return any(module_name == p or module_name.startswith(p + ".")
+               for p in config.PLANNER_ALLOWED_REPRO_IMPORTS)
+
+
+def _planner_lint(mod: _Module, scope, findings: list,
+                  check_imports: bool = True):
+    """PLN001/PLN002 over ``scope`` (a module or one function body)."""
+    for node in ast.walk(scope):
+        if check_imports and isinstance(node, ast.Import):
+            for alias in node.names:
+                if (not _planner_import_ok(alias.name)
+                        or alias.name.split(".")[0] == "jax"):
+                    findings.append(Finding(
+                        "PLN001", mod.path, node.lineno,
+                        f"planner imports {alias.name!r}: planners stay "
+                        "pure host numpy (f64)"))
+        elif check_imports and isinstance(node, ast.ImportFrom):
+            name = node.module or ""
+            if (not _planner_import_ok(name)
+                    or name.split(".")[0] == "jax"):
+                findings.append(Finding(
+                    "PLN001", mod.path, node.lineno,
+                    f"planner imports from {name!r}: planners stay pure "
+                    "host numpy (f64)"))
+        elif isinstance(node, ast.Attribute):
+            if node.attr == "float32":
+                findings.append(Finding(
+                    "PLN002", mod.path, node.lineno,
+                    "f32 drop inside the f64 planner (timelines are "
+                    "exact only in f64)"))
+        elif isinstance(node, ast.Name) and node.id == "jnp":
+            findings.append(Finding(
+                "PLN002", mod.path, node.lineno,
+                "jnp usage inside the f64 planner (device types leak "
+                "into the timeline)"))
+        elif (isinstance(node, ast.Constant)
+                and isinstance(node.value, str)
+                and node.value in F32_STRINGS):
+            findings.append(Finding(
+                "PLN002", mod.path, node.lineno,
+                "'float32' dtype string inside the f64 planner"))
+
+
+# ---------------------------------------------------------------------------
+# donation rule
+# ---------------------------------------------------------------------------
+def _stmt_path(mod: _Module, node):
+    """[(body_list, index), ...] from the outermost block down to the
+    statement containing ``node``."""
+    stmt = node
+    while stmt is not None and not isinstance(stmt, ast.stmt):
+        stmt = mod.parent.get(stmt)
+    path = []
+    while isinstance(stmt, ast.stmt):
+        parent = mod.parent.get(stmt)
+        blk = None
+        for attr in ("body", "orelse", "finalbody"):
+            b = getattr(parent, attr, None)
+            if isinstance(b, list) and stmt in b:
+                blk = b
+                break
+        if blk is None:
+            break
+        path.append((id(blk), blk.index(stmt), parent))
+        stmt = parent if isinstance(parent, ast.stmt) else None
+    return list(reversed(path))
+
+
+def _happens_after(mod: _Module, call_node, use_node) -> bool:
+    cp = _stmt_path(mod, call_node)
+    up = _stmt_path(mod, use_node)
+    for (cb, ci, cparent), (ub, ui, _uparent) in zip(cp, up):
+        if cb != ub:
+            return False
+        if ci != ui:
+            return ui > ci
+        if isinstance(cparent, (ast.For, ast.While)):
+            return True          # next loop iteration re-reads
+    return False
+
+
+def _donation_lint(mod: _Module, findings: list):
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _callee_name(node.func)
+        idx = config.DONATING_FUNCTIONS.get(callee)
+        if idx is None or idx >= len(node.args):
+            continue
+        donated = node.args[idx]
+        if not isinstance(donated, ast.Name):
+            continue
+        fn = mod.enclosing_def(node)
+        scope = fn if fn is not None else mod.tree
+        for use in ast.walk(scope):
+            if (isinstance(use, ast.Name) and use.id == donated.id
+                    and use is not donated
+                    and isinstance(use.ctx, ast.Load)
+                    and _happens_after(mod, node, use)):
+                killed = any(
+                    isinstance(k, ast.Name) and k.id == donated.id
+                    and isinstance(k.ctx, ast.Store)
+                    and _happens_after(mod, node, k)
+                    and k.lineno <= use.lineno
+                    for k in ast.walk(scope))
+                if not killed:
+                    findings.append(Finding(
+                        "BND005", mod.path, use.lineno,
+                        f"{donated.id!r} read after being donated to "
+                        f"{callee} (line {node.lineno})"))
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+def check_source(path: str, source: str) -> list[Finding]:
+    """All boundary findings for one file."""
+    findings: list[Finding] = []
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("BND001", path, e.lineno or 0,
+                        f"unparseable file: {e.msg}")]
+    mod = _Module(path, tree)
+
+    traced, weak = _mark(mod)
+    lint = _TaintLint(mod, findings, traced)
+    for fn in sorted(traced, key=lambda d: d.lineno):
+        enc = mod.enclosing_def(fn)
+        if enc is not None and enc in traced:
+            continue             # analyzed from its enclosing traced def
+        lint.run_def(fn)
+    for fn in sorted(weak, key=lambda d: d.lineno):
+        _weak_lint(mod, fn, findings)
+
+    if config.matches(path, config.PLANNER_MODULES):
+        _planner_lint(mod, mod.tree, findings)
+    for suffix, fns in config.PLANNER_FUNCTIONS.items():
+        if config.matches(path, (suffix,)):
+            for d in mod.defs:
+                if d.name in fns:
+                    _planner_lint(mod, d, findings, check_imports=True)
+
+    _donation_lint(mod, findings)
+    return findings
+
+
+def check_file(path: Path) -> list[Finding]:
+    return check_source(path.as_posix(), path.read_text())

@@ -1,0 +1,59 @@
+"""What the analyzers scan and where the module-role boundaries sit.
+
+Paths are matched by suffix against posix-style repo-relative paths, so the
+CLI works from the repo root (``python -m repro.check src/``) or any parent.
+"""
+from __future__ import annotations
+
+# Engine modules: traced scan/vmap/jit bodies live here; the boundary lint's
+# tracer rules (BND001-BND004) apply to every scanned file, but these are the
+# modules the invariant catalog names explicitly (DESIGN.md §13).
+ENGINE_MODULES = (
+    "repro/core/jit_engine.py",
+    "repro/corridor/engine.py",
+    "repro/core/flat.py",
+    "repro/selection/runtime.py",
+)
+
+# Planner modules: pure f64 host numpy, no engine/kernel imports, no jnp
+# (PLN001/PLN002).  selection/runtime.py is both an engine-facing module and
+# a planner (the f64 replay driver) — it gets both rule sets.
+PLANNER_MODULES = (
+    "repro/corridor/plan.py",
+    "repro/selection/runtime.py",
+)
+
+# Planner functions living inside engine modules: the f64 dry runs.  The
+# PLN rules apply to these function bodies only, not their whole module.
+PLANNER_FUNCTIONS = {
+    "repro/core/jit_engine.py": ("plan_fleet",),
+}
+
+# Imports a planner may take from repro.* — everything else under repro (and
+# jax) is engine internals from the planner's point of view.
+PLANNER_ALLOWED_REPRO_IMPORTS = (
+    "repro.channel",
+    "repro.selection",
+    "repro.core.mafl",       # _Timeline: the shared f64 event-queue replay
+)
+
+# Functions with donated buffers: name -> donated positional-argument index
+# (BND005 flags reads of that argument after the call).
+DONATING_FUNCTIONS = {
+    "mix_update_donated": 1,
+    "literal_update_donated": 1,
+}
+
+# The known-positive fixture corpus is deliberately broken; default scans
+# skip it (tests point the analyzers at it explicitly).
+EXCLUDE_PARTS = ("repro/check/fixtures/",)
+
+
+def is_excluded(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return any(part in p for part in EXCLUDE_PARTS)
+
+
+def matches(path: str, suffixes) -> bool:
+    p = path.replace("\\", "/")
+    return any(p.endswith(s) for s in suffixes)

@@ -1,0 +1,171 @@
+"""Findings, the rule registry, and the waiver escape hatch (DESIGN.md §13).
+
+Every analyzer in :mod:`repro.check` reports through this module: a
+:class:`Finding` carries ``file:line``, a rule id from :data:`RULES`, and a
+human message.  A finding can be *waived* in source with a comment on the
+flagged line (or the line directly above it)::
+
+    x = something_suspicious()  # repro-check: waive[BND001] trace-time np on static plan data
+
+The reason text is mandatory — an empty reason does not waive.  Waivers are
+the documented escape hatch for intentional exceptions; ``--strict`` fails on
+any finding that is not waived.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Iterable, Optional
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One checked invariant: id, short slug, why it exists, which analyzer
+    enforces it."""
+    id: str
+    slug: str
+    rationale: str
+    analyzer: str
+
+
+RULES: dict[str, Rule] = {}
+
+
+def _rule(id: str, slug: str, rationale: str, analyzer: str) -> None:
+    RULES[id] = Rule(id, slug, rationale, analyzer)
+
+
+# -- Pallas grid-race detector (check/pallas_race.py) -----------------------
+_rule("PAL001", "racy-kernel-grid",
+      "an output block is revisited by non-consecutive grid cells: the "
+      "read-modify-write races on every compiled backend (DESIGN.md §12)",
+      "pallas_race")
+_rule("PAL002", "unregistered-kernel",
+      "a pallas_call under src/repro/kernels/ has no registered analyzer "
+      "case, so dispatch has no race verdict to derive legality from",
+      "pallas_race")
+_rule("PAL003", "hand-rolled-dispatch",
+      "backend selection (jax.default_backend() comparison) inside "
+      "src/repro/kernels/ outside dispatch.py: kernel legality must be "
+      "derived from the race verdict, not hand-maintained allowlists",
+      "pallas_race")
+_rule("PAL004", "degenerate-probe",
+      "a registered analyzer case exercises fewer than 2 blocks along some "
+      "grid axis, so revisit analysis is blind to aliasing on that axis",
+      "pallas_race")
+
+# -- host/device boundary lint (check/boundary.py) --------------------------
+_rule("BND001", "host-call-on-tracer",
+      "np.* applied to a traced value inside traced code: the call either "
+      "fails at trace time or silently freezes a tracer into a constant",
+      "boundary")
+_rule("BND002", "python-branch-on-tracer",
+      "a Python if/while/for/assert predicate depends on a tracer: control "
+      "flow concretizes at trace time and the branch bakes into the program",
+      "boundary")
+_rule("BND003", "host-scalar-pull",
+      ".item()/.tolist()/float()/int()/bool() on a tracer forces a device "
+      "sync and breaks under jit",
+      "boundary")
+_rule("BND004", "f64-on-device",
+      "float64 literal or cast inside traced code: the device side is f32 "
+      "by contract (DESIGN.md §3); with x64 disabled the cast silently "
+      "downgrades, with it enabled it doubles traffic",
+      "boundary")
+_rule("BND005", "donated-buffer-reuse",
+      "a buffer passed to a donate_argnums slot is read after the donating "
+      "call: donation invalidates the buffer (DESIGN.md §12)",
+      "boundary")
+
+# -- planner dual of the boundary lint --------------------------------------
+_rule("PLN001", "planner-imports-engine",
+      "the f64 dry-run planner imports engine/kernel internals: planners "
+      "must stay pure host numpy so they can replay without device state "
+      "(DESIGN.md §3)",
+      "boundary")
+_rule("PLN002", "planner-precision-drop",
+      "f32 cast or jnp usage inside the f64 host planner: timelines are "
+      "exact only because every planner op stays f64 numpy (DESIGN.md §3)",
+      "boundary")
+_rule("PLN003", "plan-shape-instability",
+      "planner output arrays change shape across seeds: fixed-shape plan "
+      "tables are the declared prerequisite for the vmap multi-world "
+      "engine (ROADMAP)",
+      "plan_shapes")
+
+# -- dtype-flow checker (check/dtype_flow.py) -------------------------------
+_rule("DTF001", "bf16-dot",
+      "a dot/conv consumes bf16: all matmul accumulation stays f32; bf16 "
+      "is a storage format for ring/upload rows only (DESIGN.md §12)",
+      "dtype_flow")
+_rule("DTF002", "bf16-arithmetic",
+      "a non-storage primitive touches bf16: arithmetic must convert to "
+      "f32 first — bf16 may only move (slice/scatter/reshape/convert), "
+      "never accumulate (DESIGN.md §12)",
+      "dtype_flow")
+_rule("DTF003", "unexpected-bf16",
+      "bf16 appears in a program whose ring dtype is f32: the quantized "
+      "storage path leaked into the exact path",
+      "dtype_flow")
+
+
+@dataclass
+class Finding:
+    """One analyzer hit.  ``path`` is repo-relative where possible; probe
+    findings (jaxpr-level, planner-shape) use a ``<probe:name>`` pseudo-path
+    with line 0."""
+    rule: str
+    path: str
+    line: int
+    message: str
+    waived: bool = False
+    waive_reason: Optional[str] = None
+
+    def format(self) -> str:
+        mark = f"  [waived: {self.waive_reason}]" if self.waived else ""
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"({RULES[self.rule].slug}) {self.message}{mark}")
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["slug"] = RULES[self.rule].slug
+        return d
+
+
+# -- waivers ----------------------------------------------------------------
+_WAIVE_RE = re.compile(
+    r"#\s*repro-check:\s*waive\[([A-Za-z0-9_,\s]+)\]\s*(.*\S)")
+
+
+def load_waivers(source: str) -> dict[int, tuple[set[str], str]]:
+    """Map 1-based line number -> (rule ids, reason) for every waiver
+    comment in ``source``.  A waiver with no reason text is ignored."""
+    out: dict[int, tuple[set[str], str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVE_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out[i] = (rules, m.group(2).strip())
+    return out
+
+
+def apply_waivers(findings: Iterable[Finding],
+                  sources: dict[str, str]) -> list[Finding]:
+    """Mark findings waived when the flagged line (or the line above it)
+    carries a matching waiver comment.  ``sources`` maps path -> text."""
+    cache: dict[str, dict[int, tuple[set[str], str]]] = {}
+    out = []
+    for f in findings:
+        src = sources.get(f.path)
+        if src is not None:
+            if f.path not in cache:
+                cache[f.path] = load_waivers(src)
+            waivers = cache[f.path]
+            for ln in (f.line, f.line - 1):
+                hit = waivers.get(ln)
+                if hit and f.rule in hit[0]:
+                    f.waived = True
+                    f.waive_reason = hit[1]
+                    break
+        out.append(f)
+    return out

@@ -1,0 +1,8 @@
+"""Known-positive fixture corpus for the analyzer suite.
+
+Each module here violates exactly the invariants its name says it does —
+the test suite asserts the analyzers flag them (and nothing else).  The
+directory is excluded from default ``repro.check`` scans (see
+``repro.check.config.EXCLUDE_PARTS``): these are test subjects, not
+product code.
+"""

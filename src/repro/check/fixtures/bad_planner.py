@@ -1,0 +1,15 @@
+"""A deliberately bad planner module: imports engine internals (PLN001)
+and drops the f64 host timeline to f32 mid-plan (PLN002).  The test feeds
+this source to the boundary checker under a planner path."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.jit_engine import _get_program      # PLN001: engine import
+import jax.numpy as jnp                             # PLN001: jax in planner
+
+
+def plan_badly(times):
+    t32 = times.astype(np.float32)                  # PLN002: precision drop
+    order = np.argsort(t32)
+    return order, np.asarray(t32, dtype="float32")  # PLN002 again

@@ -1,0 +1,31 @@
+"""A deliberately leaky traced function: every class of host/device
+boundary violation the BND rules cover, each on its own line so the test
+can pin rule ids to line numbers."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def leaky_step(qt, w, n):
+    if qt.sum() > 0:                     # BND002: Python branch on tracer
+        w = w * 0.5
+    i = int(jnp.argmin(qt))              # BND003: host scalar pull
+    t = qt[0].item()                     # BND003: host scalar pull
+    mean = np.mean(w)                    # BND001: np.* on a tracer
+    w64 = w.astype(jnp.float64)          # BND004: f64 in traced code
+    for row in w:                        # BND002: Python for over tracer
+        t = t + float(row.sum())         # BND003 (inside the loop)
+    return w64 * mean + i + t + n
+
+
+def donating_caller(w, upload):
+    from repro.core.aggregation import mix_update_donated
+
+    mixed = mix_update_donated(w, upload, 0.5)
+    stale = upload + 1.0                 # BND005: read after donation
+    return mixed, stale

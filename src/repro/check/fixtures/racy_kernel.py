@@ -1,0 +1,39 @@
+"""A deliberately racy Pallas kernel: the output block is addressed by the
+*inner* grid axis only, so the outer axis's cells collide on the same
+block at non-consecutive row-major ranks — illegal on every compiled
+backend (classification ``racy``, PAL001)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _racy_sum_kernel(x_ref, o_ref):
+    # both (i, u) cells with the same u write block u — a read-modify-write
+    # with no sequentialisable revisit order
+    o_ref[...] = o_ref[...] + jnp.sum(x_ref[...])
+
+
+def racy_sum(x, *, block_rows: int = 2, interpret: bool = True):
+    """x: [R, U] -> [U'] partial sums; grid (R//br, U//bu) with the output
+    indexed by u alone."""
+    R, U = x.shape
+    br, bu = block_rows, 1
+    return pl.pallas_call(
+        _racy_sum_kernel,
+        grid=(R // br, U // bu),
+        in_specs=[pl.BlockSpec((br, bu), lambda i, u: (i, u))],
+        out_specs=pl.BlockSpec((bu,), lambda i, u: (u,)),
+        out_shape=jax.ShapeDtypeStruct((U,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def invoke():
+    """Analyzer case: grid (4, 2) — output block u is visited at row-major
+    ranks {u, u+2, u+4, u+6}: revisits, and not consecutive."""
+    x = jnp.ones((8, 2), jnp.float32)
+    return racy_sum(x, block_rows=2)

@@ -1,0 +1,353 @@
+"""Pallas grid-race detector (DESIGN.md §13, rules PAL001-PAL004).
+
+For every kernel under ``src/repro/kernels/`` a registered *case* invokes the
+kernel wrapper on tiny representative inputs with ``pallas_call`` swapped for
+a recorder, capturing the real ``grid`` and ``BlockSpec`` objects the wrapper
+builds.  The detector then enumerates the grid cells exactly the way Pallas
+iterates them (row-major, last axis fastest), evaluates each *output* index
+map at every cell, and inspects which cells address each output block:
+
+- ``parallel-safe``       — every output block is written by exactly one grid
+  cell; legal compiled on any backend.
+- ``sequential-axis-required`` — some output block is revisited, but each
+  block's writing cells form one consecutive run in row-major order (the
+  Pallas cross-step accumulation idiom, e.g. ``ring_agg``'s upload axis or
+  the flash-softmax vocab/kv sweeps).  Correct only where grid steps execute
+  sequentially and the block stays resident between them: TPU and the
+  interpreter.  GPU grid cells are parallel blocks — illegal there.
+- ``racy``                — revisits are non-consecutive; no compiled backend
+  executes this correctly.
+
+The per-backend legality verdict is what ``repro.kernels.dispatch`` consumes
+— the hand-maintained "compiled on TPU only" allowlist that used to live in
+``weighted_agg/ops.py`` is now derived fact.
+
+Representative shapes must populate at least two blocks per grid axis or the
+analysis is blind on that axis; PAL004 flags degenerate cases.
+"""
+from __future__ import annotations
+
+import ast
+import functools
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.check.findings import Finding
+
+BACKENDS = ("cpu", "gpu", "tpu")
+
+CLASSIFICATIONS = ("parallel-safe", "sequential-axis-required", "racy")
+
+
+@dataclass(frozen=True)
+class KernelReport:
+    """Race verdict for one kernel: the captured grid geometry, the
+    classification, and per-backend compiled legality.
+
+    ``compiled_legal[backend]`` answers "may dispatch run the *compiled*
+    Pallas kernel here?" — CPU is always False (no Mosaic/Triton lowering;
+    the interpreter is the CPU execution mode, and it is always legal
+    because it runs grid cells sequentially in row-major order)."""
+    kernel_id: str
+    fn_name: str
+    grid: tuple
+    n_outputs: int
+    classification: str
+    revisit_axes: tuple
+    compiled_legal: dict = field(hash=False)
+
+    def to_json(self) -> dict:
+        return {
+            "kernel_id": self.kernel_id,
+            "fn_name": self.fn_name,
+            "grid": list(self.grid),
+            "classification": self.classification,
+            "revisit_axes": list(self.revisit_axes),
+            "compiled_legal": dict(self.compiled_legal),
+        }
+
+
+# ---------------------------------------------------------------------------
+# capture: run the wrapper with pallas_call swapped for a recorder
+# ---------------------------------------------------------------------------
+@dataclass
+class _Captured:
+    grid: tuple
+    in_specs: list
+    out_specs: list
+    n_outputs: int
+
+
+def _capture_pallas_calls(invoke: Callable[[], object]) -> list[_Captured]:
+    """Invoke ``invoke()`` under ``jax.disable_jit()`` with
+    ``pallas.pallas_call`` replaced by a recorder that returns zeros of
+    ``out_shape`` — the wrapper's surrounding jnp code runs eagerly, the
+    kernel body never executes, and the recorder sees the exact grid and
+    BlockSpecs the wrapper built."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas
+
+    records: list[_Captured] = []
+    real = pallas.pallas_call
+
+    def fake_pallas_call(kernel, out_shape=None, *, grid=None,
+                         grid_spec=None, in_specs=None, out_specs=None,
+                         **kw):
+        if out_shape is None:
+            out_shape = kw.pop("out_shape", None)
+        multi = isinstance(out_shape, (tuple, list))
+        shapes = tuple(out_shape) if multi else (out_shape,)
+        specs = (list(out_specs) if isinstance(out_specs, (tuple, list))
+                 else [out_specs])
+        g = tuple(grid) if grid is not None else ()
+        records.append(_Captured(
+            grid=g,
+            in_specs=(list(in_specs) if in_specs is not None else []),
+            out_specs=specs, n_outputs=len(shapes)))
+
+        def run(*args):
+            outs = tuple(jnp.zeros(s.shape, s.dtype) for s in shapes)
+            return outs if multi else outs[0]
+        return run
+
+    pallas.pallas_call = fake_pallas_call
+    try:
+        with jax.disable_jit():
+            invoke()
+    finally:
+        pallas.pallas_call = real
+    if not records:
+        raise RuntimeError("registered case invoked no pallas_call")
+    return records
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+def _index_tuple(spec, cell) -> tuple:
+    idx = spec.index_map(*cell)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(x) for x in idx)
+
+
+def classify_capture(cap: _Captured) -> tuple[str, tuple]:
+    """(classification, revisit_axes) for one captured pallas_call."""
+    if not cap.grid:
+        return "parallel-safe", ()
+    cells = list(np.ndindex(*cap.grid))      # row-major: Pallas's iteration
+    rank = {c: i for i, c in enumerate(cells)}
+    worst = "parallel-safe"
+    axes: set = set()
+    for spec in cap.out_specs:
+        blocks: dict[tuple, list] = {}
+        for c in cells:
+            blocks.setdefault(_index_tuple(spec, c), []).append(c)
+        for cs in blocks.values():
+            if len(cs) == 1:
+                continue
+            for ax in range(len(cap.grid)):
+                if len({c[ax] for c in cs}) > 1:
+                    axes.add(ax)
+            rs = sorted(rank[c] for c in cs)
+            if rs != list(range(rs[0], rs[0] + len(rs))):
+                worst = "racy"
+            elif worst != "racy":
+                worst = "sequential-axis-required"
+    return worst, tuple(sorted(axes))
+
+
+def _legality(classification: str) -> dict:
+    return {
+        "cpu": False,                                     # interpreter only
+        "gpu": classification == "parallel-safe",
+        "tpu": classification != "racy",
+    }
+
+
+def analyze_callable(kernel_id: str, fn_name: str,
+                     invoke: Callable[[], object]) -> KernelReport:
+    """Capture + classify one kernel invocation.  Multiple pallas_calls in
+    one invocation are folded to the worst classification (none of ours do
+    that, but fixtures may)."""
+    caps = _capture_pallas_calls(invoke)
+    worst, axes = "parallel-safe", ()
+    grid, n_out = caps[0].grid, caps[0].n_outputs
+    for cap in caps:
+        c, a = classify_capture(cap)
+        if CLASSIFICATIONS.index(c) > CLASSIFICATIONS.index(worst):
+            worst, axes = c, a
+            grid, n_out = cap.grid, cap.n_outputs
+    return KernelReport(kernel_id=kernel_id, fn_name=fn_name, grid=grid,
+                        n_outputs=n_out, classification=worst,
+                        revisit_axes=axes, compiled_legal=_legality(worst))
+
+
+# ---------------------------------------------------------------------------
+# the registered corpus: one case per kernel under src/repro/kernels/
+# ---------------------------------------------------------------------------
+# Every case invokes the kernel with explicit interpret=True (the recorder
+# ignores it) and shapes giving >= 2 blocks per grid axis.
+
+def _case_weighted_agg():
+    import jax.numpy as jnp
+    from repro.kernels.weighted_agg.kernel import weighted_agg_2d
+    g = jnp.zeros((8, 128), jnp.float32)
+    scal = jnp.zeros((1, 2), jnp.float32)
+    weighted_agg_2d(g, g, scal, block_rows=4, interpret=True)
+
+
+def _case_ring_agg():
+    import jax.numpy as jnp
+    from repro.kernels.weighted_agg.kernel import ring_agg_2d
+    g = jnp.zeros((8, 128), jnp.float32)
+    locs = jnp.zeros((4, 8, 128), jnp.float32)
+    coeffs = jnp.zeros((4, 2), jnp.float32)
+    ring_agg_2d(g, locs, coeffs, block_rows=4, block_u=2, interpret=True)
+
+
+def _case_cross_entropy():
+    import jax.numpy as jnp
+    from repro.kernels.cross_entropy.kernel import cross_entropy_tiled
+    logits = jnp.zeros((16, 64), jnp.float32)
+    labels = jnp.zeros((16,), jnp.int32)
+    cross_entropy_tiled(logits, labels, block_r=8, block_v=32,
+                        interpret=True)
+
+
+def _case_decode_attention():
+    import jax.numpy as jnp
+    from repro.kernels.decode_attention.kernel import decode_attention_bkv
+    q = jnp.zeros((2, 2, 8), jnp.float32)
+    kv = jnp.zeros((2, 64, 8), jnp.float32)
+    pos = jnp.zeros((1, 1), jnp.int32)
+    decode_attention_bkv(q, kv, kv, pos, block_s=32, interpret=True)
+
+
+def _case_swa_attention():
+    import jax.numpy as jnp
+    from repro.kernels.swa_attention.kernel import swa_attention_bhsd
+    q = jnp.zeros((2, 256, 8), jnp.float32)
+    swa_attention_bhsd(q, q, q, window=128, block_q=128, block_k=128,
+                       interpret=True)
+
+
+# kernel_id -> (kernel module path suffix, wrapper fn name, case)
+KERNEL_CASES: dict[str, tuple[str, str, Callable]] = {
+    "weighted_agg.weighted_agg_2d": (
+        "repro/kernels/weighted_agg/kernel.py", "weighted_agg_2d",
+        _case_weighted_agg),
+    "weighted_agg.ring_agg_2d": (
+        "repro/kernels/weighted_agg/kernel.py", "ring_agg_2d",
+        _case_ring_agg),
+    "cross_entropy.cross_entropy_tiled": (
+        "repro/kernels/cross_entropy/kernel.py", "cross_entropy_tiled",
+        _case_cross_entropy),
+    "decode_attention.decode_attention_bkv": (
+        "repro/kernels/decode_attention/kernel.py", "decode_attention_bkv",
+        _case_decode_attention),
+    "swa_attention.swa_attention_bhsd": (
+        "repro/kernels/swa_attention/kernel.py", "swa_attention_bhsd",
+        _case_swa_attention),
+}
+
+_REPORT_CACHE: dict[str, KernelReport] = {}
+
+
+def get_report(kernel_id: str) -> KernelReport:
+    """The cached race verdict for a registered kernel — this is what
+    ``repro.kernels.dispatch.select_impl`` reads."""
+    rep = _REPORT_CACHE.get(kernel_id)
+    if rep is None:
+        path, fn_name, case = KERNEL_CASES[kernel_id]
+        rep = analyze_callable(kernel_id, fn_name, case)
+        _REPORT_CACHE[kernel_id] = rep
+    return rep
+
+
+def all_reports() -> list[KernelReport]:
+    return [get_report(k) for k in KERNEL_CASES]
+
+
+# ---------------------------------------------------------------------------
+# tree scan: PAL001 on reports, PAL002-PAL004 on the kernels/ source tree
+# ---------------------------------------------------------------------------
+def _def_line(path: Path, fn_name: str) -> int:
+    try:
+        tree = ast.parse(path.read_text())
+    except (OSError, SyntaxError):
+        return 0
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == fn_name:
+            return node.lineno
+    return 0
+
+
+def _registered_fn_names() -> set:
+    return {fn for _, fn, _ in KERNEL_CASES.values()}
+
+
+def scan(root: Path, files: list[Path]) -> tuple[list[KernelReport],
+                                                 list[Finding]]:
+    """Analyze the registered corpus and lint the kernels/ source tree.
+    ``files`` is the full scan set; only paths under ``repro/kernels/`` are
+    inspected here."""
+    findings: list[Finding] = []
+    kernel_files = [f for f in files
+                    if "repro/kernels/" in f.as_posix()]
+
+    reports = all_reports()
+    by_suffix = {suffix: (kid, fn) for kid, (suffix, fn, _)
+                 in KERNEL_CASES.items()}
+    for rep in reports:
+        suffix, fn_name, _ = KERNEL_CASES[rep.kernel_id]
+        src = next((f for f in kernel_files
+                    if f.as_posix().endswith(suffix)), None)
+        line = _def_line(src, fn_name) if src else 0
+        path = src.as_posix() if src else suffix
+        if rep.classification == "racy":
+            findings.append(Finding(
+                "PAL001", path, line,
+                f"kernel {rep.kernel_id} is racy on grid {rep.grid}: an "
+                "output block is revisited by non-consecutive grid cells"))
+        for ax, extent in enumerate(rep.grid):
+            if extent < 2:
+                findings.append(Finding(
+                    "PAL004", path, line,
+                    f"case for {rep.kernel_id} exercises only {extent} "
+                    f"block(s) on grid axis {ax}; aliasing there is "
+                    "invisible to the race analysis"))
+
+    registered = _registered_fn_names()
+    for f in kernel_files:
+        try:
+            tree = ast.parse(f.read_text())
+        except SyntaxError as e:
+            findings.append(Finding("PAL002", f.as_posix(), e.lineno or 0,
+                                    f"unparseable kernel file: {e.msg}"))
+            continue
+        is_dispatch = f.name == "dispatch.py"
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                has_pc = any(
+                    isinstance(c, ast.Call)
+                    and isinstance(c.func, ast.Attribute)
+                    and c.func.attr == "pallas_call"
+                    for c in ast.walk(node))
+                if has_pc and node.name not in registered:
+                    findings.append(Finding(
+                        "PAL002", f.as_posix(), node.lineno,
+                        f"function {node.name!r} builds a pallas_call but "
+                        "has no registered case in "
+                        "repro.check.pallas_race.KERNEL_CASES"))
+            if (not is_dispatch and isinstance(node, ast.Attribute)
+                    and node.attr == "default_backend"):
+                findings.append(Finding(
+                    "PAL003", f.as_posix(), node.lineno,
+                    "hand-rolled backend dispatch in kernels/: derive "
+                    "legality via repro.kernels.dispatch.select_impl"))
+    return reports, findings

@@ -1,0 +1,74 @@
+"""PLN003 probe: plan tables must be shape- and dtype-stable across seeds.
+
+The compiled engines key their program caches on plan *layout* (shapes), not
+plan *values*.  If a planner ever emitted a seed-dependent shape — a ragged
+wave table, a pruned slot array — every seed would trigger a silent
+recompile and the golden-digest fixtures would stop pinning one program.
+This probe runs each planner twice with different seeds on a small fleet and
+diffs the ndarray fields' ``(shape, dtype)`` signatures.
+
+Exempt by design (documented in DESIGN.md §13): ``waves`` is a host-side
+tuple consumed before staging (its length legitimately varies by seed — the
+engines re-derive scan segments from it at trace time and cache per-layout),
+and ``n_slots`` is a Python int folded into the layout key itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.check.findings import Finding
+
+_EXEMPT = ("waves", "n_slots", "sel", "sel_bandit", "q0")
+_PROBE_SEEDS = (0, 1)
+
+
+def _signature(plan) -> dict:
+    sig = {}
+    for f in dataclasses.fields(plan):
+        if f.name in _EXEMPT:
+            continue
+        v = getattr(plan, f.name)
+        if isinstance(v, np.ndarray):
+            sig[f.name] = (v.shape, str(v.dtype))
+        else:
+            sig[f.name] = (type(v).__name__,)
+    # q0 is a dict of per-vehicle arrays; check its members individually
+    for k, v in plan.q0.items():
+        sig[f"q0[{k}]"] = (v.shape, str(v.dtype))
+    return sig
+
+
+def _diff(name: str, sigs: dict, findings: list, path: str) -> None:
+    base_seed = _PROBE_SEEDS[0]
+    base = sigs[base_seed]
+    for seed, sig in sigs.items():
+        if seed == base_seed:
+            continue
+        for field in sorted(set(base) | set(sig)):
+            a, b = base.get(field), sig.get(field)
+            if a != b:
+                findings.append(Finding(
+                    "PLN003", path, 0,
+                    f"{name}: field {field!r} unstable across seeds "
+                    f"(seed {base_seed}: {a}, seed {seed}: {b})"))
+
+
+def probe_plan_shapes() -> list[Finding]:
+    """Run both planners across probe seeds; findings on any layout drift."""
+    from repro.channel.params import ChannelParams
+    from repro.core.jit_engine import plan_fleet
+    from repro.corridor.plan import plan_corridor
+
+    findings: list[Finding] = []
+    p = dataclasses.replace(ChannelParams(), K=5)
+
+    sigs = {s: _signature(plan_fleet(p, seed=s, rounds=12))
+            for s in _PROBE_SEEDS}
+    _diff("plan_fleet", sigs, findings, "<probe:plan_fleet>")
+
+    sigs = {s: _signature(plan_corridor(p, n_rsus=2, seed=s, rounds=12))
+            for s in _PROBE_SEEDS}
+    _diff("plan_corridor", sigs, findings, "<probe:plan_corridor>")
+    return findings

@@ -235,12 +235,15 @@ def _wave_train(local_scan, mesh, n_events, shared: bool):
 
 
 def _ring_interpret(use_kernel: bool):
-    """``ring_agg`` dispatch mode: ``None`` auto-selects (compiled Pallas
-    on TPU, the jnp chain elsewhere); ``use_kernel=True`` forces the
-    Pallas kernel — compiled on TPU, the interpreter on CPU *and* GPU
-    (the kernel's cross-chunk accumulation needs a sequential grid)."""
-    import jax as _jax
-    return (_jax.default_backend() != "tpu") if use_kernel else None
+    """``ring_agg`` dispatch mode: ``None`` auto-selects (the race
+    analyzer's verdict picks compiled Pallas where legal, the jnp chain
+    elsewhere); ``use_kernel=True`` forces the Pallas kernel — compiled
+    where the verdict allows, the interpreter everywhere else (the
+    kernel's cross-chunk accumulation needs a sequential grid)."""
+    if not use_kernel:
+        return None
+    from repro.kernels.dispatch import resolve_interpret
+    return resolve_interpret("weighted_agg.ring_agg_2d")
 
 
 def _chain_segment(g, locals_buf, coeffs, snaps, s: int, e: int,
@@ -670,50 +673,17 @@ def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
     return prog
 
 
-# ---------------------------------------------------------------------------
-# public entry point — signature mirrors mafl.run_simulation
-# ---------------------------------------------------------------------------
-def run_simulation_jit(
-    vehicles_data: Sequence[VehicleData],
-    test_images: np.ndarray,
-    test_labels: np.ndarray,
-    *,
-    scheme: str = "mafl",
-    rounds: int = 60,
-    l_iters: int = 5,
-    lr: float = 0.01,
-    params: Optional[ChannelParams] = None,
-    seed: int = 0,
-    eval_every: int = 1,
-    use_kernel: bool = False,
-    init_params=None,
-    interpretation: str = "mixing",
-    progress=None,
-    batch_size: int = 128,
-    mesh=None,
-    selection=None,
-    flat: bool = True,
-    ring_dtype: str = "f32",
-):
-    """Run M rounds entirely on device; returns the same ``SimResult`` the
-    host engines produce (same record fields, same eval cadence).
+def _stage_run(vehicles_data, *, scheme, rounds, l_iters, lr, params, seed,
+               eval_every, use_kernel, init_params, interpretation,
+               batch_size, mesh, selection, flat, ring_dtype):
+    """Validate, plan, and stage one fleet run — everything up to (but not
+    including) executing the compiled program.  Split out of
+    :func:`run_simulation_jit` so ``repro.check.dtype_flow`` can build the
+    jaxpr of the exact program the engine would run.
 
-    ``flat=True`` (the native layout, DESIGN.md §12) runs the packed
-    flat-parameter fast path: one ``[P]`` buffer per model state, queue
-    bookkeeping alone in the scan, fused ``ring_agg`` chains for the
-    aggregation — bitwise-identical outputs in f32 (golden-pinned);
-    ``flat=False`` keeps the legacy pytree program (the benchmark
-    baseline).  ``ring_dtype="bf16"`` (flat only) stores snapshot-ring
-    rows and upload buffers in bf16 around f32 master weights/accumulation
-    — halves ring memory at a documented sub-1e-2 parameter rounding
-    (EXPERIMENTS.md §Flat); it must be requested explicitly.
-
-    One behavioral difference from the host engines: the whole round loop
-    is a single device program, so ``progress`` fires post-hoc — every
-    callback arrives in round order *after* the simulation completes, not
-    live per arrival."""
+    Returns ``(prog, args, plan, layout, eval_rounds, with_state)`` where
+    ``prog(*args)`` is the staged round loop."""
     from repro.core.flat import ParamLayout
-    from repro.core.mafl import SimResult, evaluate
 
     if scheme not in _SUPPORTED_SCHEMES:
         raise ValueError(
@@ -772,8 +742,62 @@ def run_simulation_jit(
                         eval_rounds=eval_rounds)
     with_state = (plan.sel is not None and not plan.sel.is_noop
                   and plan.sel.spec.policy == "eps-bandit")
-    out = prog(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
-               jnp.float32(lr))
+    args = (w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, jnp.float32(lr))
+    return prog, args, plan, layout, eval_rounds, with_state
+
+
+# ---------------------------------------------------------------------------
+# public entry point — signature mirrors mafl.run_simulation
+# ---------------------------------------------------------------------------
+def run_simulation_jit(
+    vehicles_data: Sequence[VehicleData],
+    test_images: np.ndarray,
+    test_labels: np.ndarray,
+    *,
+    scheme: str = "mafl",
+    rounds: int = 60,
+    l_iters: int = 5,
+    lr: float = 0.01,
+    params: Optional[ChannelParams] = None,
+    seed: int = 0,
+    eval_every: int = 1,
+    use_kernel: bool = False,
+    init_params=None,
+    interpretation: str = "mixing",
+    progress=None,
+    batch_size: int = 128,
+    mesh=None,
+    selection=None,
+    flat: bool = True,
+    ring_dtype: str = "f32",
+):
+    """Run M rounds entirely on device; returns the same ``SimResult`` the
+    host engines produce (same record fields, same eval cadence).
+
+    ``flat=True`` (the native layout, DESIGN.md §12) runs the packed
+    flat-parameter fast path: one ``[P]`` buffer per model state, queue
+    bookkeeping alone in the scan, fused ``ring_agg`` chains for the
+    aggregation — bitwise-identical outputs in f32 (golden-pinned);
+    ``flat=False`` keeps the legacy pytree program (the benchmark
+    baseline).  ``ring_dtype="bf16"`` (flat only) stores snapshot-ring
+    rows and upload buffers in bf16 around f32 master weights/accumulation
+    — halves ring memory at a documented sub-1e-2 parameter rounding
+    (EXPERIMENTS.md §Flat); it must be requested explicitly.
+
+    One behavioral difference from the host engines: the whole round loop
+    is a single device program, so ``progress`` fires post-hoc — every
+    callback arrives in round order *after* the simulation completes, not
+    live per arrival."""
+    from repro.core.mafl import SimResult, evaluate
+
+    prog, args, plan, layout, eval_rounds, with_state = _stage_run(
+        vehicles_data, scheme=scheme, rounds=rounds, l_iters=l_iters,
+        lr=lr, params=params, seed=seed, eval_every=eval_every,
+        use_kernel=use_kernel, init_params=init_params,
+        interpretation=interpretation, batch_size=batch_size, mesh=mesh,
+        selection=selection, flat=flat, ring_dtype=ring_dtype)
+    M = rounds
+    out = prog(*args)
     if with_state:
         g, ring, trace, (dev_rs, dev_rc) = out
     else:

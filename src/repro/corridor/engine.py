@@ -697,6 +697,117 @@ def run_corridor_simulation(
     the jit engine, ``progress`` fires post-hoc in round order."""
     from repro.core.mafl import SimResult, evaluate
 
+    prog, args, plan, layout, eval_rounds, with_state = _stage_run(
+        sc, vehicles_data, p, seed=seed, eval_every=eval_every,
+        interpretation=interpretation, use_kernel=use_kernel,
+        batch_size=batch_size, mesh=mesh, record_cohorts=record_cohorts,
+        init_params=init_params, selection=selection, flat=flat)
+    scheme = sc.scheme
+    R = sc.n_rsus
+    M = sc.rounds
+    ring_dtype = getattr(sc, "ring_dtype", "f32")
+    flat = layout is not None
+    out = prog(*args)
+    if with_state:
+        G, cons_snaps, cohort_snaps, trace, (dev_rs, dev_rc) = out
+    else:
+        G, cons_snaps, cohort_snaps, trace = out
+    t_veh, t_rsu, t_time, t_cu, t_cl, t_dlt, t_w = (
+        np.asarray(x) for x in trace)
+
+    # divergence guard (mirrors the jit engine): the minibatch stacks and
+    # the cohort/ring pairing were planned on the host — if the device pop
+    # order or serving-cell assignment ever disagreed, fail loudly
+    if not np.array_equal(t_veh, plan.veh):
+        bad = int(np.argmax(t_veh != plan.veh))
+        raise RuntimeError(
+            "corridor engine: device pop order diverged from the host dry "
+            f"run at round {bad} (device vehicle {int(t_veh[bad])}, host "
+            f"{int(plan.veh[bad])}) — f32 time ties are not expected")
+    if not np.array_equal(t_rsu, plan.up_rsu):
+        bad = int(np.argmax(t_rsu != plan.up_rsu))
+        raise RuntimeError(
+            "corridor engine: device serving-RSU assignment diverged from "
+            f"the host dry run at round {bad} (device RSU {int(t_rsu[bad])},"
+            f" host {int(plan.up_rsu[bad])}) — an f32 boundary flip is not "
+            "expected")
+    if not np.allclose(t_time, plan.times, rtol=1e-4, atol=1e-3):
+        bad = int(np.argmax(~np.isclose(t_time, plan.times,
+                                        rtol=1e-4, atol=1e-3)))
+        raise RuntimeError(
+            "corridor engine: device event times diverged from the host "
+            f"dry run at round {bad}: {t_time[bad]} vs {plan.times[bad]}")
+    if with_state:
+        # selection divergence guard (DESIGN.md §11): the carried f32
+        # reward accumulators must reproduce the host f64 replay the
+        # admission masks were planned from
+        exp_rs, exp_rc = plan.sel_bandit
+        if not np.array_equal(np.asarray(dev_rc), exp_rc):
+            raise RuntimeError(
+                "corridor engine: device bandit arrival counts diverged "
+                "from the host selection replay")
+        if not np.allclose(np.asarray(dev_rs), exp_rs,
+                           rtol=1e-4, atol=1e-3):
+            raise RuntimeError(
+                "corridor engine: device bandit reward accumulators "
+                "diverged from the host selection replay")
+
+    if flat and ring_dtype == "bf16":
+        # bf16 divergence guard (DESIGN.md §12): the trace guards above
+        # keep the timeline exact; a non-finite cohort stack means the
+        # quantized ring diverged — fail loudly
+        if not all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree_util.tree_leaves(G)):
+            raise RuntimeError(
+                "corridor engine: non-finite cohort stack under "
+                "ring_dtype='bf16' — the quantized snapshot ring diverged "
+                "(rerun with ring_dtype='f32' to bisect)")
+    result = SimResult(scheme=f"{scheme}+corridor", rounds=[],
+                       acc_history=[], loss_history=[])
+    per_rsu_round = np.zeros(R, np.int64)
+    eval_idx = {rr: k for k, rr in enumerate(eval_rounds)}
+    for r in range(M):
+        j = int(t_rsu[r])
+        per_rsu_round[j] += 1
+        rec = RoundRecord(round=int(per_rsu_round[j]),
+                          time=float(t_time[r]), vehicle=int(t_veh[r]),
+                          upload_delay=float(t_cu[r]),
+                          train_delay=float(t_cl[r]),
+                          weight=float(t_w[r]), rsu=j)
+        rr = r + 1
+        if rr in eval_idx:
+            acc, loss = evaluate(cons_snaps[eval_idx[rr]], test_images,
+                                 test_labels)
+            rec.accuracy, rec.loss = acc, loss
+            result.acc_history.append((rr, acc))
+            result.loss_history.append((rr, loss))
+            if progress:
+                progress(rr, acc)
+        result.rounds.append(rec)
+    result.final_params = cons_snaps[eval_idx[M]]
+    result.extras = {
+        "n_rsus": R,
+        "up_rsu": t_rsu,
+        "eval_rounds": list(eval_rounds),
+        "final_cohorts": G,
+    }
+    if record_cohorts:
+        result.extras["cohort_snapshots"] = cohort_snaps
+    if plan.sel is not None:
+        result.extras["selection"] = plan.sel.summary()
+    return result
+
+
+def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
+               interpretation, use_kernel, batch_size, mesh, record_cohorts,
+               init_params, selection, flat):
+    """Validate, plan, and stage one corridor run — everything up to (but
+    not including) executing the compiled program.  Split out of
+    :func:`run_corridor_simulation` so ``repro.check.dtype_flow`` can build
+    the jaxpr of the exact program the engine would run.
+
+    Returns ``(prog, args, plan, layout, eval_rounds, with_state)`` where
+    ``prog(*args)`` is the staged round loop."""
     scheme = sc.scheme
     if scheme not in _SUPPORTED_SCHEMES:
         raise ValueError(
@@ -798,93 +909,6 @@ def run_corridor_simulation(
 
     with_state = (plan.sel is not None and not plan.sel.is_noop
                   and plan.sel.spec.policy == "eps-bandit")
-    out = prog(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
-               jnp.float32(sc.lr))
-    if with_state:
-        G, cons_snaps, cohort_snaps, trace, (dev_rs, dev_rc) = out
-    else:
-        G, cons_snaps, cohort_snaps, trace = out
-    t_veh, t_rsu, t_time, t_cu, t_cl, t_dlt, t_w = (
-        np.asarray(x) for x in trace)
-
-    # divergence guard (mirrors the jit engine): the minibatch stacks and
-    # the cohort/ring pairing were planned on the host — if the device pop
-    # order or serving-cell assignment ever disagreed, fail loudly
-    if not np.array_equal(t_veh, plan.veh):
-        bad = int(np.argmax(t_veh != plan.veh))
-        raise RuntimeError(
-            "corridor engine: device pop order diverged from the host dry "
-            f"run at round {bad} (device vehicle {int(t_veh[bad])}, host "
-            f"{int(plan.veh[bad])}) — f32 time ties are not expected")
-    if not np.array_equal(t_rsu, plan.up_rsu):
-        bad = int(np.argmax(t_rsu != plan.up_rsu))
-        raise RuntimeError(
-            "corridor engine: device serving-RSU assignment diverged from "
-            f"the host dry run at round {bad} (device RSU {int(t_rsu[bad])},"
-            f" host {int(plan.up_rsu[bad])}) — an f32 boundary flip is not "
-            "expected")
-    if not np.allclose(t_time, plan.times, rtol=1e-4, atol=1e-3):
-        bad = int(np.argmax(~np.isclose(t_time, plan.times,
-                                        rtol=1e-4, atol=1e-3)))
-        raise RuntimeError(
-            "corridor engine: device event times diverged from the host "
-            f"dry run at round {bad}: {t_time[bad]} vs {plan.times[bad]}")
-    if with_state:
-        # selection divergence guard (DESIGN.md §11): the carried f32
-        # reward accumulators must reproduce the host f64 replay the
-        # admission masks were planned from
-        exp_rs, exp_rc = plan.sel_bandit
-        if not np.array_equal(np.asarray(dev_rc), exp_rc):
-            raise RuntimeError(
-                "corridor engine: device bandit arrival counts diverged "
-                "from the host selection replay")
-        if not np.allclose(np.asarray(dev_rs), exp_rs,
-                           rtol=1e-4, atol=1e-3):
-            raise RuntimeError(
-                "corridor engine: device bandit reward accumulators "
-                "diverged from the host selection replay")
-
-    if flat and ring_dtype == "bf16":
-        # bf16 divergence guard (DESIGN.md §12): the trace guards above
-        # keep the timeline exact; a non-finite cohort stack means the
-        # quantized ring diverged — fail loudly
-        if not all(bool(jnp.isfinite(x).all())
-                   for x in jax.tree_util.tree_leaves(G)):
-            raise RuntimeError(
-                "corridor engine: non-finite cohort stack under "
-                "ring_dtype='bf16' — the quantized snapshot ring diverged "
-                "(rerun with ring_dtype='f32' to bisect)")
-    result = SimResult(scheme=f"{scheme}+corridor", rounds=[],
-                       acc_history=[], loss_history=[])
-    per_rsu_round = np.zeros(R, np.int64)
-    eval_idx = {rr: k for k, rr in enumerate(eval_rounds)}
-    for r in range(M):
-        j = int(t_rsu[r])
-        per_rsu_round[j] += 1
-        rec = RoundRecord(round=int(per_rsu_round[j]),
-                          time=float(t_time[r]), vehicle=int(t_veh[r]),
-                          upload_delay=float(t_cu[r]),
-                          train_delay=float(t_cl[r]),
-                          weight=float(t_w[r]), rsu=j)
-        rr = r + 1
-        if rr in eval_idx:
-            acc, loss = evaluate(cons_snaps[eval_idx[rr]], test_images,
-                                 test_labels)
-            rec.accuracy, rec.loss = acc, loss
-            result.acc_history.append((rr, acc))
-            result.loss_history.append((rr, loss))
-            if progress:
-                progress(rr, acc)
-        result.rounds.append(rec)
-    result.final_params = cons_snaps[eval_idx[M]]
-    result.extras = {
-        "n_rsus": R,
-        "up_rsu": t_rsu,
-        "eval_rounds": list(eval_rounds),
-        "final_cohorts": G,
-    }
-    if record_cohorts:
-        result.extras["cohort_snapshots"] = cohort_snaps
-    if plan.sel is not None:
-        result.extras["selection"] = plan.sel.summary()
-    return result
+    args = (w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
+            jnp.float32(sc.lr))
+    return prog, args, plan, layout, eval_rounds, with_state

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import resolve_interpret
+
 DEFAULT_BLOCK_R = 128
 DEFAULT_BLOCK_V = 2048
 NEG_INF = -1e30
@@ -58,9 +60,15 @@ def _ce_kernel(labels_ref, logits_ref, out_ref, m_ref, s_ref, c_ref,
 @functools.partial(jax.jit,
                    static_argnames=("block_r", "block_v", "interpret"))
 def cross_entropy_tiled(logits, labels, *, block_r=DEFAULT_BLOCK_R,
-                        block_v=DEFAULT_BLOCK_V, interpret=True):
+                        block_v=DEFAULT_BLOCK_V, interpret=None):
     """logits [R, V] (V % block_v == 0, R % block_r == 0), labels [R] int32
-    -> per-row NLL [R] f32."""
+    -> per-row NLL [R] f32.
+
+    ``interpret=None`` resolves by backend from the race analyzer's verdict
+    (``sequential-axis-required``: the vocab sweep accumulates through VMEM
+    scratch): compiled on TPU, interpreter elsewhere."""
+    interpret = resolve_interpret("cross_entropy.cross_entropy_tiled",
+                                  interpret)
     R, V = logits.shape
     br, bv = min(block_r, R), min(block_v, V)
     assert R % br == 0 and V % bv == 0, (R, V, br, bv)

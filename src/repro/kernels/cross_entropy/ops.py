@@ -11,8 +11,9 @@ from repro.kernels.cross_entropy.kernel import (DEFAULT_BLOCK_R,
                                                 cross_entropy_tiled)
 
 
-def cross_entropy(logits, labels, *, interpret=True):
-    """logits [R, V], labels [R] -> per-row NLL [R] f32 (pads as needed)."""
+def cross_entropy(logits, labels, *, interpret=None):
+    """logits [R, V], labels [R] -> per-row NLL [R] f32 (pads as needed).
+    ``interpret=None`` resolves by backend via ``repro.kernels.dispatch``."""
     R, V = logits.shape
     br = min(DEFAULT_BLOCK_R, max(8, 1 << (R - 1).bit_length()))
     bv = min(DEFAULT_BLOCK_V, V)
@@ -29,7 +30,7 @@ def cross_entropy(logits, labels, *, interpret=True):
     return out[:R]
 
 
-def lm_loss(logits, targets, *, interpret=True, use_kernel=True):
+def lm_loss(logits, targets, *, interpret=None, use_kernel=True):
     """Mean next-token NLL for [B, S, V] logits vs [B, S] targets."""
     B, S, V = logits.shape
     flat_l = logits.reshape(B * S, V)

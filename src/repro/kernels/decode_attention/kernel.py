@@ -18,6 +18,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -55,9 +57,15 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, s_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attention_bkv(q, k, v, pos, *, block_s: int = 512,
-                         interpret: bool = True):
+                         interpret=None):
     """q: [BKv, G, hd]; k, v: [BKv, S, hd]; pos: i32[1,1] scalar block.
-    Returns [BKv, G, hd]."""
+    Returns [BKv, G, hd].
+
+    ``interpret=None`` resolves by backend from the race analyzer's verdict
+    (``sequential-axis-required``: the cache sweep accumulates softmax state
+    through VMEM scratch): compiled on TPU, interpreter elsewhere."""
+    interpret = resolve_interpret("decode_attention.decode_attention_bkv",
+                                  interpret)
     BKv, G, hd = q.shape
     S = k.shape[1]
     bs = min(block_s, S)

@@ -7,8 +7,9 @@ from repro.kernels.decode_attention.kernel import decode_attention_bkv
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, block_s: int = 512,
-                     interpret: bool = True):
-    """q: [B, H, hd]; caches [B, S, Kv, hd]; pos scalar int."""
+                     interpret=None):
+    """q: [B, H, hd]; caches [B, S, Kv, hd]; pos scalar int.
+    ``interpret=None`` resolves by backend via ``repro.kernels.dispatch``."""
     B, H, hd = q.shape
     S, Kv = k_cache.shape[1], k_cache.shape[2]
     G = H // Kv

@@ -19,6 +19,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -66,9 +68,15 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, s_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
                                              "interpret"))
 def swa_attention_bhsd(q, k, v, *, window: int, block_q: int = 128,
-                       block_k: int = 128, interpret: bool = True):
+                       block_k: int = 128, interpret=None):
     """q: [BH, S, hd]; k, v: [BKv, S, hd]; BH = B*H, BKv = B*Kv.
-    Requires S % block == 0 and window % block_k == 0."""
+    Requires S % block == 0 and window % block_k == 0.
+
+    ``interpret=None`` resolves by backend from the race analyzer's verdict
+    (``sequential-axis-required``: the kv sweep accumulates softmax state
+    through VMEM scratch): compiled on TPU, interpreter elsewhere."""
+    interpret = resolve_interpret("swa_attention.swa_attention_bhsd",
+                                  interpret)
     BH, S, hd = q.shape
     BKv = k.shape[0]
     G = BH // BKv

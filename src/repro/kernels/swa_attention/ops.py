@@ -8,8 +8,9 @@ from repro.kernels.swa_attention.kernel import swa_attention_bhsd
 
 
 def swa_attention(q, k, v, window: int, *, block_q: int = 128,
-                  block_k: int = 128, interpret: bool = True):
-    """q: [B, S, H, hd]; k, v: [B, S, Kv, hd] -> [B, S, H, hd]."""
+                  block_k: int = 128, interpret=None):
+    """q: [B, S, H, hd]; k, v: [B, S, Kv, hd] -> [B, S, H, hd].
+    ``interpret=None`` resolves by backend via ``repro.kernels.dispatch``."""
     B, S, H, hd = q.shape
     Kv = k.shape[2]
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)

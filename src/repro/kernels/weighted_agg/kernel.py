@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_interpret
+
 LANE = 128
 DEFAULT_BLOCK_ROWS = 256        # 256 x 128 x 4B = 128 KiB per operand tile
 DEFAULT_BLOCK_U = 8             # uploads per grid step of the fused chain
@@ -34,13 +36,13 @@ def weighted_agg_2d(g, l, scalars, *, block_rows=DEFAULT_BLOCK_ROWS,
                     interpret=None):
     """g, l: [R, 128] same dtype; scalars: f32[1, 2] = (beta, weight).
 
-    ``interpret=None`` (default) selects the mode from the backend: the
-    kernel body runs through the Pallas interpreter on CPU (where no Mosaic
-    lowering exists) and compiles on TPU/GPU.  Pass an explicit bool to
-    force a mode — parity across modes and backends is pinned by
+    ``interpret=None`` (default) resolves the mode from the race analyzer's
+    per-backend verdict (``repro.kernels.dispatch``): this kernel is
+    parallel-safe, so it compiles on TPU/GPU and runs through the Pallas
+    interpreter on CPU (where no Mosaic lowering exists).  Pass an explicit
+    bool to force a mode — parity across modes and backends is pinned by
     ``tests/test_kernels.py``."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret("weighted_agg.weighted_agg_2d", interpret)
     R = g.shape[0]
     br = min(block_rows, R)
     return pl.pallas_call(
@@ -97,12 +99,13 @@ def ring_agg_2d(g, locs, coeffs, *, block_rows=DEFAULT_BLOCK_ROWS,
     ``3·U·P`` of U separate two-operand passes.  The cross-chunk
     accumulation through ``o_ref`` assumes grid steps execute
     *sequentially* (TPU and the interpreter do; GPU grid cells are
-    parallel blocks and would race) — ``ops.ring_agg`` only selects the
-    compiled kernel on TPU for that reason.  Sequential evaluation
-    order per element keeps the f32 path bitwise against chained
-    ``weighted_agg`` calls (see ``ref.ring_agg``).  Output is f32."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    parallel blocks and would race) — the race analyzer classifies this
+    kernel ``sequential-axis-required``, so dispatch only compiles it on
+    TPU; ``interpret=None`` anywhere else gets the interpreter.
+    Sequential evaluation order per element keeps the f32 path bitwise
+    against chained ``weighted_agg`` calls (see ``ref.ring_agg``).
+    Output is f32."""
+    interpret = resolve_interpret("weighted_agg.ring_agg_2d", interpret)
     U, R = locs.shape[0], g.shape[0]
     assert locs.shape[1:] == g.shape and coeffs.shape == (U, 2)
     br = min(block_rows, R)

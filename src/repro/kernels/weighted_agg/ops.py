@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import kernel_report, select_impl
 from repro.kernels.weighted_agg import ref
 from repro.kernels.weighted_agg.kernel import (LANE, ring_agg_2d,
                                                weighted_agg_2d)
@@ -61,24 +62,28 @@ def ring_agg(g, locs, coeffs, interpret=None):
     to U separate ``mix_update`` passes); this wrapper is the one-pass
     streaming execution of it.
 
-    ``interpret=None`` resolves by backend: the compiled Pallas kernel
-    only on TPU — its upload-chunk accumulation revisits the output tile
-    across grid steps, which requires the *sequential* grid execution TPU
-    (and the interpreter) guarantee; GPU grid cells are parallel blocks,
-    so GPU and CPU get the jnp chain (same arithmetic, one lax.scan
-    pass).  Pass ``interpret=True/False`` to force the Pallas kernel in
-    either mode (parity is pinned by ``tests/test_flat.py``)."""
+    ``interpret=None`` resolves from the race analyzer's per-backend
+    verdict (``repro.kernels.dispatch.select_impl``): the kernel is
+    ``sequential-axis-required`` — its upload-chunk accumulation revisits
+    the output tile across grid steps, which requires the *sequential*
+    grid execution TPU (and the interpreter) guarantee; GPU grid cells
+    are parallel blocks, so GPU and CPU fall back to the jnp chain (same
+    arithmetic, one lax.scan pass).  Pass ``interpret=True/False`` to
+    force the Pallas kernel in either mode (parity is pinned by
+    ``tests/test_flat.py``)."""
     U = locs.shape[0]
     if U == 0:
         return g.astype(jnp.float32)
     assert g.shape[-1] % LANE == 0, \
         f"ring_agg needs a lane-aligned buffer, got P={g.shape[-1]}"
-    if interpret is None and jax.default_backend() != "tpu":
+    mode = select_impl(kernel_report("weighted_agg.ring_agg_2d"),
+                       interpret=interpret, fallback="ref")
+    if mode == "fallback":
         return ref.ring_agg(g, locs, coeffs)
     rows = g.shape[-1] // LANE
     out = ring_agg_2d(g.reshape(rows, LANE),
                       locs.reshape(U, rows, LANE), coeffs,
-                      interpret=interpret)
+                      interpret=mode == "interpret")
     return out.reshape(-1)
 
 
