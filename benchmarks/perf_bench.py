@@ -22,7 +22,14 @@ ring/locals buffer accounting that the bf16 mode halves.
 ``python -m benchmarks.run perf check`` re-runs the QUICK lanes and
 compares against the committed baseline with a generous 2x threshold
 (the CI perf-regression smoke); ``perf k10000-smoke`` compile-smokes the
-``fleet-k10000`` scenario at 3 rounds.
+``fleet-k10000`` scenario at 3 rounds; ``perf telemetry`` measures the
+metrics=on vs metrics=off overhead at fleet-k1000 and fleet-k10000 and
+merges a ``telemetry`` section into the committed artifact (DESIGN.md
+§14 — the fleet-k1000 overhead must stay under +10%).
+
+Every lane also records per-engine ``compile_s`` (cold-minus-warm
+end-to-end) and peak-RSS columns from the engines' RunReport phase
+timers.
 """
 from __future__ import annotations
 
@@ -50,13 +57,27 @@ def _warm_ms(veh, te_i, te_l, p, sc, rounds, *, engine, reps=3, **kw):
     kwargs = dict(scheme=sc.scheme, rounds=rounds, l_iters=sc.l_iters,
                   lr=sc.lr, params=p, seed=0, eval_every=rounds,
                   engine=engine, **kw)
+    t0 = time.perf_counter()
     run_simulation(veh, te_i, te_l, **kwargs)          # compile + warm
+    cold = time.perf_counter() - t0
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
         r = run_simulation(veh, te_i, te_l, **kwargs)
         best = min(best, time.perf_counter() - t0)
-    return round(best * 1e3 / rounds, 2), float(r.final_accuracy())
+    # compile_s: cold-minus-warm end-to-end — XLA compilation plus the
+    # one-time trace, with plan/stage/eval cancelling between the runs
+    stats = {"compile_s": round(max(cold - best, 0.0), 2)}
+    rep = getattr(r, "report", None)
+    if rep is not None:
+        stats["phases_s"] = {k: round(v, 3) for k, v in rep.phases.items()}
+        if "peak_rss_bytes" in rep.memory:
+            stats["peak_rss_gb"] = round(rep.memory["peak_rss_bytes"] / 1e9,
+                                         2)
+        if "device_peak_bytes_in_use" in rep.memory:
+            stats["device_peak_gb"] = round(
+                rep.memory["device_peak_bytes_in_use"] / 1e9, 2)
+    return round(best * 1e3 / rounds, 2), float(r.final_accuracy()), stats
 
 
 def _buffer_bytes(rounds: int, ring_dtype: str, flat: bool,
@@ -94,25 +115,26 @@ def _fleet_lane(scenario: str, rounds: int, batch: int,
     print(f"building {scenario} (K={sc.K}) ...")
     veh, te_i, te_l, p = build_world(sc, seed=0)
     lane = {"K": sc.K, "rounds": rounds, "batch_size": batch,
-            "l_iters": sc.l_iters, "ms_per_round": {}}
-    ms, acc = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="batched",
-                       batch_size=batch)
-    lane["ms_per_round"]["batched-pytree"] = ms
-    print(f"  batched-pytree : {ms:8.1f} ms/round")
-    ms, acc = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="jit",
-                       batch_size=batch, flat=False)
-    lane["ms_per_round"]["jit-pytree"] = ms
-    print(f"  jit-pytree     : {ms:8.1f} ms/round")
-    ms, acc = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="jit",
-                       batch_size=batch, flat=True)
-    lane["ms_per_round"]["jit-flat"] = ms
+            "l_iters": sc.l_iters, "ms_per_round": {}, "compile_s": {},
+            "peak_rss_gb": {}}
+
+    def _one(label, **kw):
+        ms, acc, st = _warm_ms(veh, te_i, te_l, p, sc, rounds,
+                               batch_size=batch, **kw)
+        lane["ms_per_round"][label] = ms
+        lane["compile_s"][label] = st["compile_s"]
+        if "peak_rss_gb" in st:
+            lane["peak_rss_gb"][label] = st["peak_rss_gb"]
+        print(f"  {label:15s}: {ms:8.1f} ms/round "
+              f"(compile {st['compile_s']:.1f}s)")
+        return acc
+
+    _one("batched-pytree", engine="batched")
+    _one("jit-pytree", engine="jit", flat=False)
+    acc = _one("jit-flat", engine="jit", flat=True)
     lane["final_accuracy_flat"] = acc
-    print(f"  jit-flat       : {ms:8.1f} ms/round")
     if with_bf16:
-        ms, _ = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="jit",
-                         batch_size=batch, flat=True, ring_dtype="bf16")
-        lane["ms_per_round"]["jit-flat-bf16"] = ms
-        print(f"  jit-flat-bf16  : {ms:8.1f} ms/round")
+        _one("jit-flat-bf16", engine="jit", flat=True, ring_dtype="bf16")
     mspr = lane["ms_per_round"]
     lane["ratio_flat_vs_pytree"] = round(
         mspr["batched-pytree"] / mspr["jit-flat"], 2)
@@ -157,26 +179,28 @@ def _k10000_lane(rounds: int = 60, batch: int = 8) -> dict:
     print(f"building fleet-k10000 (K={sc.K}) ...")
     veh, te_i, te_l, p = build_world(sc, seed=0)
     lane = {"K": sc.K, "rounds": rounds, "batch_size": batch,
-            "ms_per_round": {}}
+            "ms_per_round": {}, "compile_s": {}}
     t0 = time.perf_counter()
-    ms, acc = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="jit",
-                       batch_size=batch, flat=True, ring_dtype="bf16",
-                       reps=2)
+    ms, acc, st = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="jit",
+                           batch_size=batch, flat=True, ring_dtype="bf16",
+                           reps=2)
     lane["ms_per_round"]["jit-flat-bf16"] = ms
+    lane["compile_s"]["jit-flat-bf16"] = st["compile_s"]
     lane["final_accuracy_bf16"] = acc
     lane["completes_bf16"] = True
     print(f"  jit-flat-bf16  : {ms:8.1f} ms/round "
           f"(full {rounds}-round lane, {time.perf_counter() - t0:.0f}s)")
-    ms, _ = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="jit",
-                     batch_size=batch, flat=False, reps=2)
+    ms, _, st = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="jit",
+                         batch_size=batch, flat=False, reps=2)
     lane["ms_per_round"]["jit-pytree-f32"] = ms
+    lane["compile_s"]["jit-pytree-f32"] = st["compile_s"]
     print(f"  jit-pytree-f32 : {ms:8.1f} ms/round")
     # the host pytree engine pays Python dispatch per arrival on a
     # 10000-vehicle queue — measured at a short round count (per-round
     # cost is flat-to-falling in rounds, so this UNDERestimates it)
     b_rounds = 10
-    ms, _ = _warm_ms(veh, te_i, te_l, p, sc, b_rounds, engine="batched",
-                     batch_size=batch, reps=1)
+    ms, _, _ = _warm_ms(veh, te_i, te_l, p, sc, b_rounds, engine="batched",
+                        batch_size=batch, reps=1)
     lane["ms_per_round"]["batched-pytree"] = ms
     lane["batched_rounds_measured"] = b_rounds
     print(f"  batched-pytree : {ms:8.1f} ms/round ({b_rounds} rounds)")
@@ -193,6 +217,74 @@ def _k10000_lane(rounds: int = 60, batch: int = 8) -> dict:
     lane["max_rss_gb"] = round(
         resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e6, 2)
     return lane
+
+
+# the telemetry hard bar (DESIGN.md §14): metrics=on may cost at most
+# this much warm ms/round over metrics=off at fleet-k1000
+TELEMETRY_OVERHEAD_LIMIT_PCT = 10.0
+
+
+def _telemetry_lane(scenario: str, rounds: int, batch: int,
+                    reps: int = 3) -> dict:
+    """metrics=on vs metrics=off on the same world, same engine, same
+    process — the published overhead of the device-resident channels
+    (DESIGN.md §14).  The engine is the scenario's fastest device lane
+    (jit-flat, bf16 ring where the scenario opts in)."""
+    sc = get_scenario(scenario)
+    print(f"building {scenario} (K={sc.K}) for telemetry overhead ...")
+    veh, te_i, te_l, p = build_world(sc, seed=0)
+    lane = {"K": sc.K, "rounds": rounds, "batch_size": batch,
+            "engine": "jit-flat" + ("-bf16" if sc.ring_dtype == "bf16"
+                                    else ""),
+            "ms_per_round": {}, "compile_s": {}, "phases_s": {},
+            "peak_rss_gb": {}}
+    for label, met in (("metrics-off", "off"), ("metrics-on", "on")):
+        ms, _, st = _warm_ms(veh, te_i, te_l, p, sc, rounds, engine="jit",
+                             batch_size=batch, flat=True,
+                             ring_dtype=sc.ring_dtype, metrics=met,
+                             reps=reps)
+        lane["ms_per_round"][label] = ms
+        lane["compile_s"][label] = st["compile_s"]
+        lane["phases_s"][label] = st.get("phases_s", {})
+        if "peak_rss_gb" in st:
+            lane["peak_rss_gb"][label] = st["peak_rss_gb"]
+        print(f"  {label:12s}: {ms:8.2f} ms/round "
+              f"(compile {st['compile_s']:.1f}s)")
+    off = lane["ms_per_round"]["metrics-off"]
+    on = lane["ms_per_round"]["metrics-on"]
+    lane["overhead_pct"] = round((on / off - 1.0) * 100.0, 2)
+    print(f"  overhead    : {lane['overhead_pct']:+.2f}% "
+          f"(limit +{TELEMETRY_OVERHEAD_LIMIT_PCT:.0f}%)")
+    return lane
+
+
+def telemetry_lanes() -> int:
+    """``perf telemetry``: measure the metrics on/off overhead at
+    fleet-k1000 and fleet-k10000 and merge a ``telemetry`` section into
+    the committed BENCH_perf.json (EXPERIMENTS.md §Telemetry quotes it).
+    Exit 1 if the fleet-k1000 overhead exceeds the published limit."""
+    lanes = {
+        "fleet-k1000": _telemetry_lane("fleet-k1000", 30, 128),
+        "fleet-k10000": _telemetry_lane("fleet-k10000", 60, 8, reps=2),
+    }
+    base_path = os.path.join(REPO_ROOT, "BENCH_perf.json")
+    payload = {"lanes": {}, "quick": False}
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            payload = json.load(f)
+    payload["telemetry"] = {
+        "overhead_limit_pct": TELEMETRY_OVERHEAD_LIMIT_PCT,
+        "lanes": lanes,
+    }
+    path = save_result("BENCH_perf", payload)
+    print(f"wrote {path}")
+    pct = lanes["fleet-k1000"]["overhead_pct"]
+    if pct > TELEMETRY_OVERHEAD_LIMIT_PCT:
+        print(f"telemetry overhead check FAILED: {pct:+.2f}% > "
+              f"+{TELEMETRY_OVERHEAD_LIMIT_PCT:.0f}% at fleet-k1000")
+        return 1
+    print("telemetry overhead check passed")
+    return 0
 
 
 def _headline_summary() -> dict:
@@ -318,6 +410,8 @@ def main(argv) -> int:
         return check()
     if argv and argv[0] == "k10000-smoke":
         return k10000_smoke()
+    if argv and argv[0] == "telemetry":
+        return telemetry_lanes()
     quick = bool(int(os.environ.get("QUICK", "0")))
     run(quick=quick)
     return 0

@@ -25,7 +25,9 @@
                numbers; QUICK=1 runs the smoke lanes only.
                ``perf check`` compares fresh QUICK lanes against the
                committed baseline (2x threshold, CI perf-regression job);
-               ``perf k10000-smoke`` compile-smokes fleet-k10000.
+               ``perf k10000-smoke`` compile-smokes fleet-k10000;
+               ``perf telemetry`` measures the metrics=on/off overhead
+               (DESIGN.md §14) and merges it into BENCH_perf.json.
 
 All committed (non-quick) BENCH_*.json artifacts are also copied to the
 repo root, where the perf-trajectory tracker reads them.

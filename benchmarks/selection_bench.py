@@ -46,7 +46,7 @@ def _timed(world, sc, engine, rounds, selection, seed=0):
 def _bench(world, sc, engine, rounds, selection):
     cold, r = _timed(world, sc, engine, rounds, selection)
     warm, r = _timed(world, sc, engine, rounds, selection)
-    admitted = (r.extras["selection"]["n_admitted_final"]
+    admitted = (r.report.selection["n_admitted_final"]
                 if selection is not None else sc.K)
     return {
         "cold_s": round(cold, 3),

@@ -45,7 +45,7 @@ def main():
                            params=p, seed=0, eval_every=rounds,
                            engine="jit", selection=spec)
         dt = time.time() - t0
-        admitted = (r.extras["selection"]["n_admitted_final"]
+        admitted = (r.report.selection["n_admitted_final"]
                     if spec is not None else p.K)
         rows.append((pname, admitted, r.final_accuracy(),
                      dt * 1e3 / rounds))

@@ -13,6 +13,7 @@ ENGINE_MODULES = (
     "repro/corridor/engine.py",
     "repro/core/flat.py",
     "repro/selection/runtime.py",
+    "repro/telemetry/device.py",
 )
 
 # Planner modules: pure f64 host numpy, no engine/kernel imports, no jnp
@@ -21,6 +22,8 @@ ENGINE_MODULES = (
 PLANNER_MODULES = (
     "repro/corridor/plan.py",
     "repro/selection/runtime.py",
+    "repro/telemetry/spec.py",
+    "repro/telemetry/replay.py",
 )
 
 # Planner functions living inside engine modules: the f64 dry runs.  The
@@ -35,6 +38,7 @@ PLANNER_ALLOWED_REPRO_IMPORTS = (
     "repro.channel",
     "repro.selection",
     "repro.core.mafl",       # _Timeline: the shared f64 event-queue replay
+    "repro.telemetry",       # MetricsSpec is plan data (DESIGN.md §14)
 )
 
 # Functions with donated buffers: name -> donated positional-argument index

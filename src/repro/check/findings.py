@@ -108,6 +108,13 @@ _rule("DTF003", "unexpected-bf16",
       "storage path leaked into the exact path",
       "dtype_flow")
 
+# -- telemetry off-path probe (check/telemetry_off.py) ----------------------
+_rule("TEL001", "metrics-off-not-legacy",
+      "metrics=off staged a different program than the legacy no-metrics "
+      "path: 'off' must map to None before the program-cache key so both "
+      "share one executable bitwise (DESIGN.md §14)",
+      "telemetry_off")
+
 
 @dataclass
 class Finding:

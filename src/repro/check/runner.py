@@ -42,7 +42,7 @@ def run_checks(paths: list[str], *, probes: bool = True):
     timings["pallas_race"] = time.perf_counter() - t0
 
     if probes:
-        from repro.check import dtype_flow, plan_shapes
+        from repro.check import dtype_flow, plan_shapes, telemetry_off
 
         t0 = time.perf_counter()
         findings.extend(plan_shapes.probe_plan_shapes())
@@ -51,6 +51,10 @@ def run_checks(paths: list[str], *, probes: bool = True):
         t0 = time.perf_counter()
         findings.extend(dtype_flow.probe_dtype_flow())
         timings["dtype_flow"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        findings.extend(telemetry_off.probe_telemetry_off())
+        timings["telemetry_off"] = time.perf_counter() - t0
 
     sources = {}
     for f in files:

@@ -62,6 +62,7 @@ scheme, both of which carry host-side state between arrivals.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -271,7 +272,8 @@ def _chain_segment(g, locals_buf, coeffs, snaps, s: int, e: int,
 def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                    interpretation: str, use_kernel: bool, mesh,
                    fedasync_mix: float, flat_layout=None,
-                   ring_dtype: str = "f32", eval_rounds: tuple = ()):
+                   ring_dtype: str = "f32", eval_rounds: tuple = (),
+                   metrics=None):
     """Trace-time constants live in the closure; the returned function is
     cached on the plan/world structure so repeated runs of the same world
     (determinism tests, warm benchmarks) compile exactly once.
@@ -316,6 +318,16 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                       for b, n, _ in plan.sel.boundaries if len(n)}
     else:
         readmit_at = {}
+
+    # telemetry (DESIGN.md §14): the same fold as selection — a static
+    # MetricsSpec from the host planner, fixed-shape accumulators appended
+    # to the scan carry, occupancy/pop-wait as extra ys columns.  metrics
+    # is None on the off path, so every met_on branch vanishes and the
+    # program is textually the legacy one (rule TEL001).
+    met_on = metrics is not None
+    if met_on:
+        from repro.telemetry import device as tel_dev
+        met_edges = jnp.asarray(metrics.edges, jnp.float32)
 
     def eq36_upload_delay(gains, x0, idx, t_up):
         """Eq. 3-6 re-schedule pipeline: slot gain -> position wrap ->
@@ -397,7 +409,16 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
             local_scan = client_mod._local_scan
             g = layout.pack(w0)                 # f32[P] master weights
             locals_buf = jnp.zeros((M, layout.P), store_dtype)
-            snaps = {0: store(g)}
+            mst = ring_stats = None
+            store_row = store
+            if met_on:
+                mst = tel_dev.fleet_state(metrics)
+                if metrics.ring_guard and bf16:
+                    # trace-level bf16 ring guard: every stored snapshot
+                    # row is counted for non-finite / max-|x| (DESIGN §14)
+                    ring_stats = tel_dev.RingStats()
+                    store_row = ring_stats.wrap(store)
+            snaps = {0: store_row(g)}
             rs = rc = None
             if with_state:
                 rs = jnp.zeros(K, jnp.float32)
@@ -413,6 +434,8 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                 # body per segment: locals_buf rebinds per wave (the
                 # lax.scan traced-body cache pitfall, DESIGN.md §9).
                 def seg_body(carry, r):
+                    if met_on:
+                        carry, mst = carry[:-1], carry[-1]
                     if fused_chain:
                         g = None
                         if with_state:
@@ -424,6 +447,9 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                     else:
                         g, qt, qdl, qcu = carry
                     i = jnp.argmin(qt)                          # pop
+                    if met_on:
+                        # live slots at the instant of pop (incl. this one)
+                        occ = jnp.sum(jnp.isfinite(qt)).astype(jnp.int32)
                     t, cu, cl, dl_t = qt[i], qcu[i], qcl[i], qdl[i]
                     if fused_chain:
                         if scheme == "mafl":
@@ -452,7 +478,13 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                     else:
                         out = ((g, qt, qdl, qcu, rs, rc) if with_state
                                else (g, qt, qdl, qcu))
-                    return out, (i, t, cu, cl, dl_t, weight)
+                    ys = (i, t, cu, cl, dl_t, weight)
+                    if met_on:
+                        mst, gap = tel_dev.fleet_pop(mst, met_edges,
+                                                     t=t, dl_t=dl_t)
+                        out = out + (mst,)
+                        ys = ys + (occ, gap)
+                    return out, ys
                 return seg_body
 
             def readmit(qt, qdl, qcu, A, t_b):
@@ -473,7 +505,8 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                         pay = layout.unpack(jnp.stack(
                             [snaps[int(pr)] for pr in pay_rounds]))
                     train = _wave_train(local_scan, mesh, len(T), shared)
-                    loc, _ = train(pay, imgs[T], labs[T], lr)
+                    with jax.named_scope(f"wave_train_{s}"):
+                        loc, _ = train(pay, imgs[T], labs[T], lr)
                     locals_buf = locals_buf.at[jnp.asarray(T)].set(
                         layout.pack(loc, dtype=store_dtype))
                 seg_traces = []
@@ -492,9 +525,14 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                         else:
                             carry0 = ((g, qt, qdl, qcu, rs, rc)
                                       if with_state else (g, qt, qdl, qcu))
-                        carry, ys = jax.lax.scan(
-                            make_flat_body(locals_buf), carry0,
-                            jnp.arange(a, b))
+                        if met_on:
+                            carry0 = carry0 + (mst,)
+                        with jax.named_scope(f"event_scan_{a}_{b}"):
+                            carry, ys = jax.lax.scan(
+                                make_flat_body(locals_buf), carry0,
+                                jnp.arange(a, b))
+                        if met_on:
+                            carry, mst = carry[:-1], carry[-1]
                         if fused_chain:
                             if with_state:
                                 qt, qdl, qcu, rs, rc = carry
@@ -507,7 +545,7 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                         traces.append(ys)
                         seg_traces.append(ys)
                     if not fused_chain and b in needed:
-                        snaps[b] = store(g)
+                        snaps[b] = store_row(g)
                     if b in readmit_at:
                         qt, qdl, qcu = readmit(qt, qdl, qcu, readmit_at[b],
                                                traces[-1][1][-1])
@@ -524,14 +562,28 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                                           w_c, t=t_c, dl_t=dlt_c,
                                           fedasync_mix=fedasync_mix)
                     coeffs = jnp.stack([cc, dd], axis=1)
-                    g = _chain_segment(g, locals_buf, coeffs, snaps, s, e,
-                                       needed, store, ring_interp)
+                    with jax.named_scope(f"ring_chain_{s}_{e}"):
+                        g = _chain_segment(g, locals_buf, coeffs, snaps,
+                                           s, e, needed, store_row,
+                                           ring_interp)
             trace = tuple(jnp.concatenate([tr[k] for tr in traces])
                           for k in range(6))
             evals = jnp.stack([snaps[rr] for rr in eval_rounds])
             if with_state:
-                return layout.unpack(g), evals, trace, (rs, rc)
-            return layout.unpack(g), evals, trace
+                ret = (layout.unpack(g), evals, trace, (rs, rc))
+            else:
+                ret = (layout.unpack(g), evals, trace)
+            if met_on:
+                met_out = {
+                    "stale_hist": mst[0],
+                    "occupancy": jnp.concatenate(
+                        [tr[6] for tr in traces]),
+                    "gap": jnp.concatenate([tr[7] for tr in traces]),
+                }
+                if ring_stats is not None:
+                    met_out.update(ring_stats.out())
+                ret = ret + (met_out,)
+            return ret
 
         return jax.jit(program_flat)
 
@@ -542,6 +594,7 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
         locals_buf = jax.tree_util.tree_map(
             lambda x: jnp.zeros((M,) + x.shape, x.dtype), w0)
         g = w0
+        mst = tel_dev.fleet_state(metrics) if met_on else None
         rs = rc = None
         if with_state:
             rs = jnp.zeros(K, jnp.float32)
@@ -556,11 +609,16 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
             # capture of ``locals_buf`` and aggregates zeros for every
             # later wave.
             def seg_body(carry, r):
+                if met_on:
+                    carry, mst = carry[:-1], carry[-1]
                 if with_state:
                     g, ring, qt, qdl, qcu, rs, rc = carry
                 else:
                     g, ring, qt, qdl, qcu = carry
                 i = jnp.argmin(qt)                              # pop
+                if met_on:
+                    # live slots at the instant of pop (incl. this one)
+                    occ = jnp.sum(jnp.isfinite(qt)).astype(jnp.int32)
                 t, cu, cl, dl_t = qt[i], qcu[i], qcl[i], qdl[i]
                 loc = jax.tree_util.tree_map(lambda B: B[r], locals_buf)
                 g, weight = aggregate(g, loc, t, cu, cl, dl_t)  # Eq. 10+11
@@ -585,7 +643,13 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                 qcu = qcu.at[i].set(cu_new)
                 out = ((g, ring, qt, qdl, qcu, rs, rc) if with_state
                        else (g, ring, qt, qdl, qcu))
-                return out, (i, t, cu, cl, dl_t, weight)
+                ys = (i, t, cu, cl, dl_t, weight)
+                if met_on:
+                    mst, gap = tel_dev.fleet_pop(mst, met_edges,
+                                                 t=t, dl_t=dl_t)
+                    out = out + (mst,)
+                    ys = ys + (occ, gap)
+                return out, ys
             return seg_body
 
         def readmit(qt, qdl, qcu, A, t_b):
@@ -610,7 +674,8 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                     idx = jnp.asarray(pay_rounds)
                     pay = jax.tree_util.tree_map(lambda R: R[idx], ring)
                 train = _wave_train(local_scan, mesh, len(T), shared)
-                loc, _ = train(pay, imgs[T], labs[T], lr)
+                with jax.named_scope(f"wave_train_{s}"):
+                    loc, _ = train(pay, imgs[T], labs[T], lr)
                 T_dev = jnp.asarray(T)
                 locals_buf = jax.tree_util.tree_map(
                     lambda B, L: B.at[T_dev].set(L), locals_buf, loc)
@@ -622,8 +687,14 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                 if b > a:
                     carry0 = ((g, ring, qt, qdl, qcu, rs, rc) if with_state
                               else (g, ring, qt, qdl, qcu))
-                    carry, ys = jax.lax.scan(
-                        make_seg_body(locals_buf), carry0, jnp.arange(a, b))
+                    if met_on:
+                        carry0 = carry0 + (mst,)
+                    with jax.named_scope(f"event_scan_{a}_{b}"):
+                        carry, ys = jax.lax.scan(
+                            make_seg_body(locals_buf), carry0,
+                            jnp.arange(a, b))
+                    if met_on:
+                        carry, mst = carry[:-1], carry[-1]
                     if with_state:
                         g, ring, qt, qdl, qcu, rs, rc = carry
                     else:
@@ -638,25 +709,37 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
         trace = tuple(jnp.concatenate([tr[k] for tr in traces])
                       for k in range(6))
         if with_state:
-            return g, ring, trace, (rs, rc)
-        return g, ring, trace
+            ret = (g, ring, trace, (rs, rc))
+        else:
+            ret = (g, ring, trace)
+        if met_on:
+            met_out = {
+                "stale_hist": mst[0],
+                "occupancy": jnp.concatenate([tr[6] for tr in traces]),
+                "gap": jnp.concatenate([tr[7] for tr in traces]),
+            }
+            ret = ret + (met_out,)
+        return ret
 
     return jax.jit(program)
 
 
 def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
                  use_kernel, mesh, fedasync_mix, shapes, flat_layout=None,
-                 ring_dtype="f32", eval_rounds=()):
+                 ring_dtype="f32", eval_rounds=(), metrics=None):
     # the trainer function rides in the key as the object itself, not its
     # id(): ids are reused after GC, which could silently replay a program
-    # traced against a different (monkeypatched) trainer
+    # traced against a different (monkeypatched) trainer.  metrics=off is
+    # normalized to None *before* this key, so an off run shares the legacy
+    # executable object outright (rule TEL001).
     key = (plan.waves, tuple(plan.dl_round.tolist()), plan.n_slots, p,
            scheme, interpretation, use_kernel, fedasync_mix,
            _mesh_key(mesh), shapes,
            None if plan.sel is None else plan.sel.signature(),
            client_mod._local_scan,
            None if flat_layout is None else flat_layout.signature(),
-           ring_dtype, eval_rounds if flat_layout is not None else ())
+           ring_dtype, eval_rounds if flat_layout is not None else (),
+           None if metrics is None else metrics.signature())
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
         prog = _build_program(plan, p, scheme=scheme,
@@ -664,7 +747,7 @@ def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
                               use_kernel=use_kernel, mesh=mesh,
                               fedasync_mix=fedasync_mix,
                               flat_layout=flat_layout, ring_dtype=ring_dtype,
-                              eval_rounds=eval_rounds)
+                              eval_rounds=eval_rounds, metrics=metrics)
         _PROGRAM_CACHE[key] = prog
         while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
             _PROGRAM_CACHE.popitem(last=False)
@@ -675,16 +758,21 @@ def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
 
 def _stage_run(vehicles_data, *, scheme, rounds, l_iters, lr, params, seed,
                eval_every, use_kernel, init_params, interpretation,
-               batch_size, mesh, selection, flat, ring_dtype):
+               batch_size, mesh, selection, flat, ring_dtype,
+               metrics=None, timers=None):
     """Validate, plan, and stage one fleet run — everything up to (but not
     including) executing the compiled program.  Split out of
     :func:`run_simulation_jit` so ``repro.check.dtype_flow`` can build the
     jaxpr of the exact program the engine would run.
 
-    Returns ``(prog, args, plan, layout, eval_rounds, with_state)`` where
-    ``prog(*args)`` is the staged round loop."""
+    Returns ``(prog, args, plan, layout, eval_rounds, with_state, met)``
+    where ``prog(*args)`` is the staged round loop and ``met`` is the
+    resolved :class:`MetricsSpec` (None on the exact legacy off path)."""
     from repro.core.flat import ParamLayout
+    from repro.telemetry.spec import resolve_metrics
+    from repro.telemetry.timers import PhaseTimers
 
+    timers = timers if timers is not None else PhaseTimers()
     if scheme not in _SUPPORTED_SCHEMES:
         raise ValueError(
             f"engine='jit' supports schemes {_SUPPORTED_SCHEMES}, not "
@@ -702,9 +790,17 @@ def _stage_run(vehicles_data, *, scheme, rounds, l_iters, lr, params, seed,
     if rounds < 1:
         raise ValueError("rounds must be >= 1")
 
-    plan = plan_fleet(p, seed, rounds, selection)
+    with timers.phase("plan"):
+        plan = plan_fleet(p, seed, rounds, selection)
+        # the telemetry spec is plan data (DESIGN.md §14): histogram edges
+        # derive from the dry run's f64 staleness/pop times, and metrics=off
+        # normalizes to None — the exact legacy program
+        met = resolve_metrics(
+            metrics, stale=plan.times - plan.download_time,
+            times=plan.times, n_rsus=1, ring_guard=(ring_dtype == "bf16"))
     M = rounds
 
+    _t0 = time.perf_counter()
     key = jax.random.PRNGKey(seed)
     w0 = init_params if init_params is not None else init_cnn(key)
 
@@ -739,11 +835,12 @@ def _stage_run(vehicles_data, *, scheme, rounds, l_iters, lr, params, seed,
                         use_kernel=use_kernel, mesh=mesh,
                         fedasync_mix=DEFAULT_FEDASYNC_MIX, shapes=shapes,
                         flat_layout=layout, ring_dtype=ring_dtype,
-                        eval_rounds=eval_rounds)
+                        eval_rounds=eval_rounds, metrics=met)
     with_state = (plan.sel is not None and not plan.sel.is_noop
                   and plan.sel.spec.policy == "eps-bandit")
     args = (w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, jnp.float32(lr))
-    return prog, args, plan, layout, eval_rounds, with_state
+    timers.add("stage", time.perf_counter() - _t0)
+    return prog, args, plan, layout, eval_rounds, with_state, met
 
 
 # ---------------------------------------------------------------------------
@@ -770,6 +867,7 @@ def run_simulation_jit(
     selection=None,
     flat: bool = True,
     ring_dtype: str = "f32",
+    metrics=None,
 ):
     """Run M rounds entirely on device; returns the same ``SimResult`` the
     host engines produce (same record fields, same eval cadence).
@@ -787,17 +885,33 @@ def run_simulation_jit(
     One behavioral difference from the host engines: the whole round loop
     is a single device program, so ``progress`` fires post-hoc — every
     callback arrives in round order *after* the simulation completes, not
-    live per arrival."""
-    from repro.core.mafl import SimResult, evaluate
+    live per arrival.
 
-    prog, args, plan, layout, eval_rounds, with_state = _stage_run(
+    ``metrics="on"`` folds device-resident telemetry into the scan
+    (DESIGN.md §14): staleness histogram, slot-queue occupancy and
+    argmin-pop wait traces accumulate in fixed-shape carry state, surfaced
+    on ``result.report.channels``.  Any falsy value ("off"/None/False)
+    stages the *exact* legacy program — same cache entry, bitwise-identical
+    outputs (pinned by ``tests/test_telemetry.py``)."""
+    from repro.core.mafl import SimResult, evaluate
+    from repro.telemetry import RunReport, memory_stats
+    from repro.telemetry.report import wave_stats
+    from repro.telemetry.timers import PhaseTimers
+
+    timers = PhaseTimers()
+    prog, args, plan, layout, eval_rounds, with_state, met = _stage_run(
         vehicles_data, scheme=scheme, rounds=rounds, l_iters=l_iters,
         lr=lr, params=params, seed=seed, eval_every=eval_every,
         use_kernel=use_kernel, init_params=init_params,
         interpretation=interpretation, batch_size=batch_size, mesh=mesh,
-        selection=selection, flat=flat, ring_dtype=ring_dtype)
+        selection=selection, flat=flat, ring_dtype=ring_dtype,
+        metrics=metrics, timers=timers)
     M = rounds
-    out = prog(*args)
+    with timers.phase("run"):
+        out = jax.block_until_ready(prog(*args))
+    met_dev = None
+    if met is not None:
+        out, met_dev = out[:-1], out[-1]
     if with_state:
         g, ring, trace, (dev_rs, dev_rc) = out
     else:
@@ -851,25 +965,46 @@ def run_simulation_jit(
     eval_idx = {rr: k for k, rr in enumerate(eval_rounds)}
     result = SimResult(scheme=scheme, rounds=[], acc_history=[],
                        loss_history=[], final_params=g)
-    for r in range(M):
-        rec = RoundRecord(round=r + 1, time=float(t_time[r]),
-                          vehicle=int(t_veh[r]),
-                          upload_delay=float(t_cu[r]),
-                          train_delay=float(t_cl[r]),
-                          weight=float(t_w[r]))
-        rr = r + 1
-        if rr % eval_every == 0 or rr == rounds:
-            if flat:
-                params_r = layout.unpack(ring[eval_idx[rr]])
-            else:
-                params_r = jax.tree_util.tree_map(lambda R: R[rr], ring)
-            acc, loss = evaluate(params_r, test_images, test_labels)
-            rec.accuracy, rec.loss = acc, loss
-            result.acc_history.append((rr, acc))
-            result.loss_history.append((rr, loss))
-            if progress:
-                progress(rr, acc)
-        result.rounds.append(rec)
-    if plan.sel is not None:
-        result.extras["selection"] = plan.sel.summary()
+    with timers.phase("eval"):
+        for r in range(M):
+            rec = RoundRecord(round=r + 1, time=float(t_time[r]),
+                              vehicle=int(t_veh[r]),
+                              upload_delay=float(t_cu[r]),
+                              train_delay=float(t_cl[r]),
+                              weight=float(t_w[r]))
+            rr = r + 1
+            if rr % eval_every == 0 or rr == rounds:
+                if flat:
+                    params_r = layout.unpack(ring[eval_idx[rr]])
+                else:
+                    params_r = jax.tree_util.tree_map(
+                        lambda R: R[rr], ring)
+                acc, loss = evaluate(params_r, test_images, test_labels)
+                rec.accuracy, rec.loss = acc, loss
+                result.acc_history.append((rr, acc))
+                result.loss_history.append((rr, loss))
+                if progress:
+                    progress(rr, acc)
+            result.rounds.append(rec)
+    sel_summary = None if plan.sel is None else plan.sel.summary()
+    p = params or ChannelParams()
+    channels = {}
+    if met is not None:
+        channels = {k: np.asarray(v) for k, v in met_dev.items()}
+        # bandit-style reward trace derived from the pop trace — the
+        # per-arrival quality signal the selection layer would score
+        # (gamma^(cu-1) * zeta^(cl-1)), published whether or not a
+        # bandit policy is active
+        channels["reward"] = (p.gamma ** (t_cu.astype(np.float64) - 1.0)
+                              * p.zeta ** (t_cl.astype(np.float64) - 1.0))
+        if with_state:
+            channels["reward_sum"] = np.asarray(dev_rs)
+            channels["reward_count"] = np.asarray(dev_rc)
+    result.report = RunReport(
+        engine="jit", scheme=scheme, rounds=rounds, seed=seed,
+        metrics_on=met is not None,
+        spec=None if met is None else met.to_json(),
+        phases=timers.snapshot(), memory=memory_stats(),
+        selection=sel_summary, waves=wave_stats(plan.waves, p.K),
+        channels=channels)
     return result

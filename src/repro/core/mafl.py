@@ -63,6 +63,10 @@ class SimResult:
     # engine-specific additions (e.g. the corridor engine's per-RSU trace
     # and cohort snapshots) that don't fit the common record schema
     extras: dict = field(default_factory=dict)
+    # typed, versioned run telemetry (repro.telemetry.report.RunReport):
+    # phase timers and plan statics always; device/host channel data when
+    # the run asked for metrics (DESIGN.md §14)
+    report: object = None
 
     def final_accuracy(self) -> float:
         return self.acc_history[-1][1] if self.acc_history else float("nan")
@@ -130,6 +134,7 @@ def run_simulation(
     selection=None,
     flat: bool = True,
     ring_dtype: str = "f32",
+    metrics=None,
 ) -> SimResult:
     """Run M rounds of the chosen aggregation scheme (Algorithm 1).
 
@@ -142,7 +147,16 @@ def run_simulation(
     vehicle-selection layer (DESIGN.md §11): unadmitted vehicles are parked
     at (re-)schedule time — they occupy no queue slot and train no wave —
     and epoch boundaries (``spec.resel_every`` arrivals) re-score the fleet.
-    ``None`` runs the exact legacy path."""
+    ``None`` runs the exact legacy path.
+
+    ``metrics`` (None/'off' | 'on' | ``MetricsSpec``) activates the
+    telemetry channels (DESIGN.md §14); the host engines collect them in
+    f64 alongside the event loop, the device engines accumulate them in
+    the scan carry.  Off is the exact legacy path; phase timers and the
+    ``result.report`` record are always attached."""
+    from repro.telemetry import metrics_requested
+    from repro.telemetry.timers import PhaseTimers
+
     if engine not in ENGINES:
         raise ValueError(
             f"unknown engine {engine!r}; expected one of {ENGINES}")
@@ -156,7 +170,7 @@ def run_simulation(
             eval_every=eval_every, use_kernel=use_kernel,
             init_params=init_params, interpretation=interpretation,
             progress=progress, batch_size=batch_size, selection=selection,
-            flat=flat, ring_dtype=ring_dtype)
+            flat=flat, ring_dtype=ring_dtype, metrics=metrics)
     if ring_dtype != "f32":
         # the bf16 snapshot ring exists only on the packed flat layout of
         # the device engines (DESIGN.md §12) — an explicit gate, never a
@@ -176,6 +190,16 @@ def run_simulation(
     clients = [Vehicle(d, lr=lr, batch_size=fleet_batch, seed=seed)
                for d in vehicles_data]
 
+    timers = PhaseTimers()
+    met_req = metrics_requested(metrics)
+    # host-side channel collection (DESIGN.md §14): the event loop already
+    # sees every value the device accumulators fold, so the host engines
+    # record the channels directly in f64
+    ch_stale: list = []
+    ch_occ: list = []
+    ch_gap: list = []
+    ch_times: list = []
+
     sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
     timeline = _Timeline(p, seed)
     queue = timeline.queue
@@ -186,7 +210,8 @@ def run_simulation(
         # rounds consume, and the wave engine trains nothing else.  (The
         # replay carries its own SelectionState, so admission decisions are
         # reproduced byte-for-byte.)
-        consumed = _consumed_events(p, seed, rounds, selection)
+        with timers.phase("plan"):
+            consumed = _consumed_events(p, seed, rounds, selection)
 
     def schedule(vehicle: int, t_download: float):
         timeline.schedule(vehicle, t_download, server.global_params)
@@ -202,14 +227,22 @@ def run_simulation(
 
         ``ev.local_params`` must already hold the local update trained from
         the stale payload snapshot."""
+        if met_req:
+            # the pop already happened (+1) and the re-schedule has not:
+            # the same instant the device engines count isfinite slots at
+            ch_occ.append(len(queue) + 1)
+            ch_stale.append(ev.time - ev.download_time)
+            ch_gap.append(ev.time - (ch_times[-1] if ch_times else 0.0))
+            ch_times.append(ev.time)
         rec = server.receive(
             ev.local_params, time=ev.time, vehicle=ev.vehicle,
             upload_delay=ev.upload_delay, train_delay=ev.train_delay,
             download_time=ev.download_time)
         ev.local_params = ev.payload = None
         if server.round % eval_every == 0 or server.round == rounds:
-            acc, loss = evaluate(server.global_params, test_images,
-                                 test_labels)
+            with timers.phase("eval"):
+                acc, loss = evaluate(server.global_params, test_images,
+                                     test_labels)
             rec.accuracy, rec.loss = acc, loss
             result.acc_history.append((server.round, acc))
             result.loss_history.append((server.round, loss))
@@ -228,56 +261,105 @@ def run_simulation(
         timeline.prune()
 
     if engine in ("serial", "unbatched"):
-        while server.round < rounds and len(queue):
-            ev = queue.pop()
-            # local training from the model the vehicle downloaded (the
-            # stale snapshot in the payload); the compute runs now, but the
-            # ordering and delays follow the event times (DESIGN.md §2).
-            ev.local_params, _ = clients[ev.vehicle].local_update(
-                ev.payload, l_iters)
-            consume(ev)
+        with timers.phase("run"):
+            while server.round < rounds and len(queue):
+                ev = queue.pop()
+                # local training from the model the vehicle downloaded (the
+                # stale snapshot in the payload); the compute runs now, but
+                # the ordering and delays follow the event times
+                # (DESIGN.md §2).
+                ev.local_params, _ = clients[ev.vehicle].local_update(
+                    ev.payload, l_iters)
+                consume(ev)
     else:
-        while server.round < rounds and len(queue):
-            # Wave: train every pending upload that the dry-run proved will
-            # be consumed and whose result is missing.  Payload snapshots
-            # are frozen at schedule time, so these trainings are mutually
-            # independent and zero of them are wasted.
-            untrained = sorted(
-                (ev for ev in queue.pending()
-                 if ev.local_params is None
-                 and (ev.vehicle, ev.cycle) in consumed),
-                key=lambda ev: (ev.time, ev.seq))
-            batches = [clients[ev.vehicle].sample_batches(l_iters)
-                       for ev in untrained]
-            outs, losses = local_update_many(
-                [ev.payload for ev in untrained], batches, lr,
-                chunk=wave_chunk)
-            for ev, out, lo in zip(untrained, outs, losses):
-                ev.local_params, ev.local_loss = out, lo
-            # Drain in time order until an event without a precomputed
-            # result (freshly re-scheduled) reaches the front — identical
-            # arrival semantics to the serial engine.  A front event that
-            # is outside the consumed set can only mean rounds are
-            # exhausted (the dry run replicates this pop sequence).
-            while (server.round < rounds and len(queue)
-                   and queue.peek().local_params is not None):
-                consume(queue.pop())
-            if (not untrained and server.round < rounds and len(queue)
-                    and queue.peek().local_params is None):
-                # the dry run said the front event is never consumed, yet
-                # rounds remain — the timelines have diverged; fail loudly
-                # rather than silently returning a truncated run
-                raise RuntimeError(
-                    "batched engine: dry-run consumed-set diverged from "
-                    f"live timeline at round {server.round} (front event "
-                    f"vehicle={queue.peek().vehicle} "
-                    f"cycle={queue.peek().cycle})")
+        with timers.phase("run"):
+            while server.round < rounds and len(queue):
+                # Wave: train every pending upload that the dry-run proved
+                # will be consumed and whose result is missing.  Payload
+                # snapshots are frozen at schedule time, so these trainings
+                # are mutually independent and zero of them are wasted.
+                untrained = sorted(
+                    (ev for ev in queue.pending()
+                     if ev.local_params is None
+                     and (ev.vehicle, ev.cycle) in consumed),
+                    key=lambda ev: (ev.time, ev.seq))
+                batches = [clients[ev.vehicle].sample_batches(l_iters)
+                           for ev in untrained]
+                outs, losses = local_update_many(
+                    [ev.payload for ev in untrained], batches, lr,
+                    chunk=wave_chunk)
+                for ev, out, lo in zip(untrained, outs, losses):
+                    ev.local_params, ev.local_loss = out, lo
+                # Drain in time order until an event without a precomputed
+                # result (freshly re-scheduled) reaches the front —
+                # identical arrival semantics to the serial engine.  A
+                # front event that is outside the consumed set can only
+                # mean rounds are exhausted (the dry run replicates this
+                # pop sequence).
+                while (server.round < rounds and len(queue)
+                       and queue.peek().local_params is not None):
+                    consume(queue.pop())
+                if (not untrained and server.round < rounds and len(queue)
+                        and queue.peek().local_params is None):
+                    # the dry run said the front event is never consumed,
+                    # yet rounds remain — the timelines have diverged; fail
+                    # loudly rather than silently returning a truncated run
+                    raise RuntimeError(
+                        "batched engine: dry-run consumed-set diverged "
+                        f"from live timeline at round {server.round} "
+                        f"(front event vehicle={queue.peek().vehicle} "
+                        f"cycle={queue.peek().cycle})")
 
     result.rounds = server.rounds
     result.final_params = server.global_params
-    if sel is not None:
-        result.extras["selection"] = sel.plan().summary()
+    sel_summary = None if sel is None else sel.plan().summary()
+    result.report = _host_report(
+        engine=engine, scheme=scheme, rounds=rounds, seed=seed,
+        metrics=metrics, met_req=met_req, p=p, timers=timers,
+        selection=sel_summary, records=result.rounds, stale=ch_stale,
+        occ=ch_occ, gap=ch_gap, times=ch_times)
     return result
+
+
+def _host_report(*, engine, scheme, rounds, seed, metrics, met_req, p,
+                 timers, selection, records, stale, occ, gap, times,
+                 n_rsus=1, up_rsu=None, handover=None,
+                 handover_count=None):
+    """Build the host engines' :class:`RunReport` (DESIGN.md §14): f64
+    channels collected alongside the event loop, bucketed through the same
+    planner edges the device path would use (identical by construction —
+    the host values ARE the planner replay)."""
+    from repro.telemetry.report import RunReport
+    from repro.telemetry.spec import resolve_metrics, stale_histogram
+    from repro.telemetry.timers import memory_stats
+
+    report = RunReport(engine=engine, scheme=scheme, rounds=rounds,
+                       seed=seed, metrics_on=met_req,
+                       phases=timers.snapshot(), memory=memory_stats(),
+                       selection=selection)
+    if met_req:
+        st = np.asarray(stale)
+        spec = resolve_metrics(metrics, stale=st, times=np.asarray(times),
+                               n_rsus=n_rsus)
+        report.spec = spec.to_json()
+        channels = {
+            "stale_hist": stale_histogram(spec.edges, st, rsu=up_rsu,
+                                          n_rsus=n_rsus),
+            "occupancy": np.asarray(occ, np.int64),
+            "gap": np.asarray(gap),
+        }
+        if records:
+            # the bandit reward IS the paper's delay weight (Eqs. 7, 9) —
+            # derived per-pop from the recorded delays for every scheme
+            cu = np.array([r.upload_delay for r in records])
+            cl = np.array([r.train_delay for r in records])
+            channels["reward"] = p.gamma ** (cu - 1.0) * p.zeta ** (cl - 1.0)
+        if handover is not None:
+            channels["handover"] = np.asarray(handover, np.int64)
+            channels["handover_count"] = np.asarray(handover_count,
+                                                    np.int64)
+        report.channels = channels
+    return report
 
 
 class _Timeline:

@@ -276,7 +276,7 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
                  engine: Optional[str] = None, eval_every: int = 10,
                  progress=None, use_kernel: bool = False, mesh=None,
                  record_cohorts: bool = False, flat: Optional[bool] = None,
-                 **overrides) -> SimResult:
+                 metrics=None, **overrides) -> SimResult:
     """Build the named world and run it; ``overrides`` replace Scenario
     fields (e.g. ``rounds=20`` for a shortened run, or
     ``ring_dtype="bf16"`` for the explicit half-memory ring opt-in).
@@ -288,7 +288,9 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
     handover loop for whatever was requested is gone.  ``mesh`` /
     ``record_cohorts`` reach the corridor engine only.  ``flat`` selects
     the device engines' packed-buffer fast path (DESIGN.md §12); ``None``
-    means the engine default (flat on)."""
+    means the engine default (flat on).  ``metrics="on"`` enables the
+    telemetry channels (DESIGN.md §14) on every engine; the returned
+    ``result.report`` is stamped with the scenario name."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if overrides:
         sc = dataclasses.replace(sc, **overrides)
@@ -327,19 +329,27 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
                     "mesh/record_cohorts require engine='corridor'; the "
                     "serial reference runs unsharded and keeps no cohort "
                     "snapshots")
-            return run_handover_simulation(sc, veh, te_i, te_l, p,
-                                           seed=seed, eval_every=eval_every,
-                                           use_kernel=use_kernel,
-                                           progress=progress)
-        return run_corridor_simulation(sc, veh, te_i, te_l, p, seed=seed,
-                                       eval_every=eval_every,
-                                       use_kernel=use_kernel, mesh=mesh,
-                                       record_cohorts=record_cohorts,
-                                       progress=progress, flat=flat)
+            return _stamp(run_handover_simulation(
+                sc, veh, te_i, te_l, p, seed=seed, eval_every=eval_every,
+                use_kernel=use_kernel, progress=progress,
+                metrics=metrics), sc)
+        return _stamp(run_corridor_simulation(
+            sc, veh, te_i, te_l, p, seed=seed, eval_every=eval_every,
+            use_kernel=use_kernel, mesh=mesh,
+            record_cohorts=record_cohorts, progress=progress, flat=flat,
+            metrics=metrics), sc)
     kw = {} if flat is None else {"flat": flat}
-    return run_simulation(veh, te_i, te_l, scheme=sc.scheme,
-                          rounds=sc.rounds, l_iters=sc.l_iters, lr=sc.lr,
-                          params=p, seed=seed, eval_every=eval_every,
-                          use_kernel=use_kernel, engine=eng,
-                          progress=progress, selection=sc.selection_spec(),
-                          ring_dtype=sc.ring_dtype, **kw)
+    return _stamp(run_simulation(
+        veh, te_i, te_l, scheme=sc.scheme,
+        rounds=sc.rounds, l_iters=sc.l_iters, lr=sc.lr,
+        params=p, seed=seed, eval_every=eval_every,
+        use_kernel=use_kernel, engine=eng,
+        progress=progress, selection=sc.selection_spec(),
+        ring_dtype=sc.ring_dtype, metrics=metrics, **kw), sc)
+
+
+def _stamp(result: SimResult, sc: Scenario) -> SimResult:
+    """Stamp the scenario name onto the run's telemetry report."""
+    if getattr(result, "report", None) is not None:
+        result.report.scenario = sc.name
+    return result

@@ -58,6 +58,7 @@ divergence raise instead of silently mis-pairing batches or cohorts.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from typing import Optional, Sequence
 
@@ -100,7 +101,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                    reconcile_every: int, reconcile_mode: str,
                    reconcile_tau: float, eval_rounds: tuple,
                    fedasync_mix: float, record_cohorts: bool,
-                   flat_layout=None, ring_dtype: str = "f32"):
+                   flat_layout=None, ring_dtype: str = "f32",
+                   metrics=None):
     """Trace-time constants live in the closure; cached per world structure
     like the jit engine's program.
 
@@ -143,6 +145,14 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
     # f32 reward accumulators through the scan (guard-checked)
     sel_active = plan.sel is not None and not plan.sel.is_noop
     with_state = sel_active and plan.sel.spec.policy == "eps-bandit"
+
+    # telemetry fold (DESIGN.md §14): every metrics branch below is gated
+    # on this *static* flag, so ``metrics=None`` traces a program textually
+    # identical to the legacy one (rule TEL001 — bitwise off path)
+    met_on = metrics is not None
+    if met_on:
+        from repro.telemetry import device as tel_dev
+        met_edges = jnp.asarray(metrics.edges, jnp.float32)
     if sel_active:
         adm_tab = jnp.asarray(
             np.stack([plan.sel.mask_for_round(r) for r in range(M)]))
@@ -237,6 +247,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
         # pitfall, DESIGN.md §9) — and ``off`` is this shard's first RSU
         # row (0 when unsharded)
         def body(carry, r):
+            if met_on:
+                carry, mst = carry[:-1], carry[-1]
             if with_state:
                 G, qt, qdl, qcu, rs, rc = carry
             else:
@@ -246,6 +258,11 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             i = flat % K
             t = qt[j, i]
             cu, cl, dl_t = qcu[i], qcl[i], qdl[i]
+            if met_on:
+                # per-RSU live slots at pop time, before the slot
+                # migration writes (matches the f64 replay's pre-pop
+                # pending count)
+                occ = jnp.sum(jnp.isfinite(qt), axis=1).astype(jnp.int32)
             loc = jax.tree_util.tree_map(lambda B: B[r], locals_buf)
             owned = (j >= off) & (j < off + Rl)
             row = jnp.where(owned, j - off, 0)
@@ -280,7 +297,19 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             qcu = qcu.at[i].set(cu_new)
             out = ((G, qt, qdl, qcu, rs, rc) if with_state
                    else (G, qt, qdl, qcu))
-            return out, (i, j, t, cu, cl, dl_t, weight, contrib)
+            ys = (i, j, t, cu, cl, dl_t, weight, contrib)
+            if met_on:
+                # handover = the admitted re-schedule lands on a new RSU
+                # (parked vehicles never migrate; readmits are counted by
+                # neither the device nor the f64 replay)
+                ho = (j_new != j)
+                if sel_active:
+                    ho = ho & adm_tab[r, i]
+                mst, gap = tel_dev.corridor_pop(mst, met_edges, t=t,
+                                                dl_t=dl_t, j=j, handover=ho)
+                out = out + (mst,)
+                ys = ys + (occ, gap, ho)
+            return out, ys
         return body
 
     def run_segment(st, locals_buf, gains, x0, qcl, a, b):
@@ -289,16 +318,18 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
         those rounds, and the scalar trace columns."""
         if n_shards == 1:
             body = make_seg_body(locals_buf, gains, x0, qcl, 0)
-            carry, ys = jax.lax.scan(body, st, jnp.arange(a, b))
-            return carry, ys[7], ys[:7]
+            with jax.named_scope(f"event_scan_{a}_{b}"):
+                carry, ys = jax.lax.scan(body, st, jnp.arange(a, b))
+            return carry, ys[7], ys[:7] + ys[8:]
 
         def seg_fn(st, locals_buf, gains, x0, qcl):
             off = jax.lax.axis_index(_RSU_AXIS) * Rl
             body = make_seg_body(locals_buf, gains, x0, qcl, off)
-            carry, ys = jax.lax.scan(body, st, jnp.arange(a, b))
+            with jax.named_scope(f"event_scan_{a}_{b}"):
+                carry, ys = jax.lax.scan(body, st, jnp.arange(a, b))
             rows = jax.tree_util.tree_map(
                 lambda x: jax.lax.psum(x, _RSU_AXIS), ys[7])
-            return carry, rows, ys[:7]
+            return carry, rows, ys[:7] + ys[8:]
 
         # cohort stack sharded over the RSU axis; queue columns (and the
         # bandit accumulators, when carried) replicated
@@ -398,8 +429,15 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             G = jnp.broadcast_to(layout.pack(w0)[None],
                                  (R, layout.P)).astype(jnp.float32)
             locals_buf = jnp.zeros((M, layout.P), store_dtype)
-            ring = [store(layout.pack(w0))] + [None] * M
-            cons_snaps, cohort_snaps, traces = [], [], []
+            mst = ring_stats = None
+            store_row = store
+            if met_on:
+                mst = tel_dev.corridor_state(metrics)
+                if metrics.ring_guard and bf16:
+                    ring_stats = tel_dev.RingStats()
+                    store_row = ring_stats.wrap(store)
+            ring = [store_row(layout.pack(w0))] + [None] * M
+            cons_snaps, cohort_snaps, traces, met_traces = [], [], [], []
             rs = rc = None
             if with_state:
                 rs = jnp.zeros(K, jnp.float32)
@@ -411,6 +449,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                 # the carry and aggregation streams per-RSU afterwards
                 # (fresh body per segment — locals_buf rebinds per wave)
                 def body(carry, r):
+                    if met_on:
+                        carry, mst = carry[:-1], carry[-1]
                     if fused_chain:
                         G = None
                         if with_state:
@@ -426,6 +466,9 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                     i = flat % K
                     t = qt[j, i]
                     cu, cl, dl_t = qcu[i], qcl[i], qdl[i]
+                    if met_on:
+                        occ = jnp.sum(jnp.isfinite(qt),
+                                      axis=1).astype(jnp.int32)
                     if fused_chain:
                         if scheme == "mafl":
                             weight = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
@@ -456,10 +499,20 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                     if fused_chain:
                         out = ((qt, qdl, qcu, rs, rc) if with_state
                                else (qt, qdl, qcu))
-                        return out, (i, j, t, cu, cl, dl_t, weight)
-                    out = ((G, qt, qdl, qcu, rs, rc) if with_state
-                           else (G, qt, qdl, qcu))
-                    return out, (i, j, t, cu, cl, dl_t, weight, new_row)
+                        ys = (i, j, t, cu, cl, dl_t, weight)
+                    else:
+                        out = ((G, qt, qdl, qcu, rs, rc) if with_state
+                               else (G, qt, qdl, qcu))
+                        ys = (i, j, t, cu, cl, dl_t, weight, new_row)
+                    if met_on:
+                        ho = (j_new != j)
+                        if sel_active:
+                            ho = ho & adm_tab[r, i]
+                        mst, gap = tel_dev.corridor_pop(
+                            mst, met_edges, t=t, dl_t=dl_t, j=j, handover=ho)
+                        out = out + (mst,)
+                        ys = ys + (occ, gap, ho)
+                    return out, ys
                 return body
 
             def readmit(qt, qdl, qcu, A, t_b):
@@ -484,7 +537,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                         pay = layout.unpack(jnp.stack(
                             [ring[pr] for pr in pay_rounds]))
                     train = _wave_train(local_scan, mesh, len(T), shared)
-                    loc, _ = train(pay, imgs[T], labs[T], lr)
+                    with jax.named_scope(f"wave_train_{s}"):
+                        loc, _ = train(pay, imgs[T], labs[T], lr)
                     locals_buf = locals_buf.at[jnp.asarray(T)].set(
                         layout.pack(loc, dtype=store_dtype))
                 points = sorted({b for b in range(s + 1, e + 1)
@@ -500,8 +554,15 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                         else:
                             st = ((G, qt, qdl, qcu, rs, rc) if with_state
                                   else (G, qt, qdl, qcu))
-                        st, ys = jax.lax.scan(make_flat_body(locals_buf),
-                                              st, jnp.arange(a, b))
+                        if met_on:
+                            st = st + (mst,)
+                        with jax.named_scope(f"event_scan_{a}_{b}"):
+                            st, ys = jax.lax.scan(
+                                make_flat_body(locals_buf),
+                                st, jnp.arange(a, b))
+                        if met_on:
+                            st, mst = st[:-1], st[-1]
+                            met_traces.append(ys[-3:])
                         if fused_chain:
                             if with_state:
                                 qt, qdl, qcu, rs, rc = st
@@ -532,15 +593,15 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                                         interpret=ring_interp)
                                     last = chunk[-1] + 1
                                     if last in needed:
-                                        ring[last] = store(g_j)
+                                        ring[last] = store_row(g_j)
                                 G = G.at[jr].set(g_j)
                         else:
                             rows = ys[7]
                             for r in range(a, b):
-                                ring[r + 1] = store(rows[r - a])
+                                ring[r + 1] = store_row(rows[r - a])
                     if b in reconcile_set:
                         G = mix_rows(G, stack_mean(G))
-                        ring[b] = store(G[int(up_rsu[b - 1])])
+                        ring[b] = store_row(G[int(up_rsu[b - 1])])
                     if b in readmit_at:
                         qt, qdl, qcu = readmit(qt, qdl, qcu, readmit_at[b],
                                                traces[-1][2][-1])
@@ -553,10 +614,23 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
 
             trace = tuple(jnp.concatenate([tr[k] for tr in traces])
                           for k in range(7))
+            ret = (layout.unpack(G), cons_snaps, cohort_snaps, trace)
             if with_state:
-                return layout.unpack(G), cons_snaps, cohort_snaps, trace, \
-                    (rs, rc)
-            return layout.unpack(G), cons_snaps, cohort_snaps, trace
+                ret = ret + ((rs, rc),)
+            if met_on:
+                met_out = {
+                    "stale_hist": mst[0],
+                    "handover_count": mst[2],
+                    "occupancy": jnp.concatenate(
+                        [m[0] for m in met_traces]),
+                    "gap": jnp.concatenate([m[1] for m in met_traces]),
+                    "handover": jnp.concatenate(
+                        [m[2] for m in met_traces]),
+                }
+                if ring_stats is not None:
+                    met_out.update(ring_stats.out())
+                ret = ret + (met_out,)
+            return ret
 
         return jax.jit(program_flat)
 
@@ -571,6 +645,7 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             lambda x: jnp.zeros((M,) + x.shape, x.dtype), w0)
         ring = [w0] + [None] * M       # one model per round (see header)
         cons_snaps, cohort_snaps, traces = [], [], []
+        mst = tel_dev.corridor_state(metrics) if met_on else None
         rs = rc = None
         if with_state:
             rs = jnp.zeros(K, jnp.float32)
@@ -604,7 +679,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                         lambda *xs: jnp.stack(xs),
                         *[ring[pr] for pr in pay_rounds])
                 train = _wave_train(local_scan, mesh, len(T), shared)
-                loc, _ = train(pay, imgs[T], labs[T], lr)
+                with jax.named_scope(f"wave_train_{s}"):
+                    loc, _ = train(pay, imgs[T], labs[T], lr)
                 T_dev = jnp.asarray(T)
                 locals_buf = jax.tree_util.tree_map(
                     lambda B, L: B.at[T_dev].set(L), locals_buf, loc)
@@ -620,8 +696,12 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                 if b > a:
                     st = ((G, qt, qdl, qcu, rs, rc) if with_state
                           else (G, qt, qdl, qcu))
+                    if met_on:
+                        st = st + (mst,)
                     st, rows, ys = run_segment(
                         st, locals_buf, gains, x0, qcl, a, b)
+                    if met_on:
+                        st, mst = st[:-1], st[-1]
                     if with_state:
                         G, qt, qdl, qcu, rs, rc = st
                     else:
@@ -651,10 +731,19 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
 
         trace = tuple(jnp.concatenate([tr[k] for tr in traces])
                       for k in range(7))
+        ret = (gather_cohorts(G), cons_snaps, cohort_snaps, trace)
         if with_state:
-            return gather_cohorts(G), cons_snaps, cohort_snaps, trace, \
-                (rs, rc)
-        return gather_cohorts(G), cons_snaps, cohort_snaps, trace
+            ret = ret + ((rs, rc),)
+        if met_on:
+            met_out = {
+                "stale_hist": mst[0],
+                "handover_count": mst[2],
+                "occupancy": jnp.concatenate([tr[7] for tr in traces]),
+                "gap": jnp.concatenate([tr[8] for tr in traces]),
+                "handover": jnp.concatenate([tr[9] for tr in traces]),
+            }
+            ret = ret + (met_out,)
+        return ret
 
     return jax.jit(program)
 
@@ -680,6 +769,7 @@ def run_corridor_simulation(
     init_params=None,
     selection=None,
     flat: Optional[bool] = None,
+    metrics=None,
 ):
     """Run ``sc.rounds`` corridor arrivals entirely on device; returns the
     same ``SimResult`` the serial reference produces (same record fields,
@@ -694,20 +784,37 @@ def run_corridor_simulation(
     ``result.extras`` carries the corridor-specific outputs: the per-round
     serving-RSU trace, the final cohort stack, and (``record_cohorts=True``)
     per-eval-round cohort snapshots for per-RSU accuracy curves.  As with
-    the jit engine, ``progress`` fires post-hoc in round order."""
-    from repro.core.mafl import SimResult, evaluate
+    the jit engine, ``progress`` fires post-hoc in round order.
 
-    prog, args, plan, layout, eval_rounds, with_state = _stage_run(
+    ``metrics="on"`` folds device-resident telemetry into the scan
+    (DESIGN.md §14): per-RSU staleness histograms, per-RSU occupancy,
+    handover counters, and pop-wait traces accumulate in fixed-shape carry
+    state, surfaced on ``result.report.channels``.  Any falsy value stages
+    the *exact* legacy program (same cache entry, bitwise-identical
+    outputs, rule TEL001)."""
+    from repro.core.mafl import SimResult, evaluate
+    from repro.telemetry import RunReport, memory_stats
+    from repro.telemetry.report import wave_stats
+    from repro.telemetry.timers import PhaseTimers
+
+    timers = PhaseTimers()
+    prog, args, plan, layout, eval_rounds, with_state, met = _stage_run(
         sc, vehicles_data, p, seed=seed, eval_every=eval_every,
         interpretation=interpretation, use_kernel=use_kernel,
         batch_size=batch_size, mesh=mesh, record_cohorts=record_cohorts,
-        init_params=init_params, selection=selection, flat=flat)
+        init_params=init_params, selection=selection, flat=flat,
+        metrics=metrics, timers=timers)
+    p = p if p is not None else sc.channel()
     scheme = sc.scheme
     R = sc.n_rsus
     M = sc.rounds
     ring_dtype = getattr(sc, "ring_dtype", "f32")
     flat = layout is not None
-    out = prog(*args)
+    with timers.phase("run"):
+        out = jax.block_until_ready(prog(*args))
+    met_dev = None
+    if met is not None:
+        out, met_dev = out[:-1], out[-1]
     if with_state:
         G, cons_snaps, cohort_snaps, trace, (dev_rs, dev_rc) = out
     else:
@@ -766,24 +873,25 @@ def run_corridor_simulation(
                        acc_history=[], loss_history=[])
     per_rsu_round = np.zeros(R, np.int64)
     eval_idx = {rr: k for k, rr in enumerate(eval_rounds)}
-    for r in range(M):
-        j = int(t_rsu[r])
-        per_rsu_round[j] += 1
-        rec = RoundRecord(round=int(per_rsu_round[j]),
-                          time=float(t_time[r]), vehicle=int(t_veh[r]),
-                          upload_delay=float(t_cu[r]),
-                          train_delay=float(t_cl[r]),
-                          weight=float(t_w[r]), rsu=j)
-        rr = r + 1
-        if rr in eval_idx:
-            acc, loss = evaluate(cons_snaps[eval_idx[rr]], test_images,
-                                 test_labels)
-            rec.accuracy, rec.loss = acc, loss
-            result.acc_history.append((rr, acc))
-            result.loss_history.append((rr, loss))
-            if progress:
-                progress(rr, acc)
-        result.rounds.append(rec)
+    with timers.phase("eval"):
+        for r in range(M):
+            j = int(t_rsu[r])
+            per_rsu_round[j] += 1
+            rec = RoundRecord(round=int(per_rsu_round[j]),
+                              time=float(t_time[r]), vehicle=int(t_veh[r]),
+                              upload_delay=float(t_cu[r]),
+                              train_delay=float(t_cl[r]),
+                              weight=float(t_w[r]), rsu=j)
+            rr = r + 1
+            if rr in eval_idx:
+                acc, loss = evaluate(cons_snaps[eval_idx[rr]], test_images,
+                                     test_labels)
+                rec.accuracy, rec.loss = acc, loss
+                result.acc_history.append((rr, acc))
+                result.loss_history.append((rr, loss))
+                if progress:
+                    progress(rr, acc)
+            result.rounds.append(rec)
     result.final_params = cons_snaps[eval_idx[M]]
     result.extras = {
         "n_rsus": R,
@@ -793,21 +901,42 @@ def run_corridor_simulation(
     }
     if record_cohorts:
         result.extras["cohort_snapshots"] = cohort_snaps
-    if plan.sel is not None:
-        result.extras["selection"] = plan.sel.summary()
+    sel_summary = None if plan.sel is None else plan.sel.summary()
+    channels = {}
+    if met is not None:
+        channels = {k: np.asarray(v) for k, v in met_dev.items()}
+        # per-arrival quality signal (Eqs. 7, 9 delay weight) — the
+        # bandit-style reward trace, published for every scheme
+        channels["reward"] = (p.gamma ** (t_cu.astype(np.float64) - 1.0)
+                              * p.zeta ** (t_cl.astype(np.float64) - 1.0))
+        if with_state:
+            channels["reward_sum"] = np.asarray(dev_rs)
+            channels["reward_count"] = np.asarray(dev_rc)
+    result.report = RunReport(
+        engine="corridor", scheme=f"{scheme}+corridor", rounds=M,
+        seed=seed, metrics_on=met is not None,
+        spec=None if met is None else met.to_json(),
+        phases=timers.snapshot(), memory=memory_stats(),
+        selection=sel_summary, waves=wave_stats(plan.waves, p.K),
+        channels=channels)
     return result
 
 
 def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
                interpretation, use_kernel, batch_size, mesh, record_cohorts,
-               init_params, selection, flat):
+               init_params, selection, flat, metrics=None, timers=None):
     """Validate, plan, and stage one corridor run — everything up to (but
     not including) executing the compiled program.  Split out of
     :func:`run_corridor_simulation` so ``repro.check.dtype_flow`` can build
     the jaxpr of the exact program the engine would run.
 
-    Returns ``(prog, args, plan, layout, eval_rounds, with_state)`` where
-    ``prog(*args)`` is the staged round loop."""
+    Returns ``(prog, args, plan, layout, eval_rounds, with_state, met)``
+    where ``prog(*args)`` is the staged round loop and ``met`` is the
+    resolved :class:`MetricsSpec` (None on the exact legacy off path)."""
+    from repro.telemetry.spec import resolve_metrics
+    from repro.telemetry.timers import PhaseTimers
+
+    timers = timers if timers is not None else PhaseTimers()
     scheme = sc.scheme
     if scheme not in _SUPPORTED_SCHEMES:
         raise ValueError(
@@ -845,8 +974,15 @@ def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
                          "(unsharded corridor): only the packed ring "
                          "stores bf16 snapshots around the f32 stack")
 
-    plan = plan_corridor(p, R, seed, rounds, entry=entry, selection=spec,
-                         reconcile_every=sc.reconcile_every)
+    with timers.phase("plan"):
+        plan = plan_corridor(p, R, seed, rounds, entry=entry,
+                             selection=spec,
+                             reconcile_every=sc.reconcile_every)
+        met = resolve_metrics(
+            metrics, stale=plan.times - plan.download_time,
+            times=plan.times, n_rsus=R,
+            ring_guard=(ring_dtype == "bf16"))
+    _t0 = time.perf_counter()
     M = rounds
     eval_rounds = tuple(sorted({rr for rr in range(1, M + 1)
                                 if rr % eval_every == 0} | {M}))
@@ -890,7 +1026,8 @@ def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
                  _mesh_key(mesh), shapes,
                  None if plan.sel is None else plan.sel.signature(),
                  client_mod._local_scan,
-                 None if layout is None else layout.signature(), ring_dtype)
+                 None if layout is None else layout.signature(), ring_dtype,
+                 None if met is None else met.signature())
     prog = _PROGRAM_CACHE.get(cache_key)
     if prog is None:
         prog = _build_program(
@@ -900,7 +1037,7 @@ def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
             reconcile_tau=float(getattr(sc, "reconcile_tau", 0.5)),
             eval_rounds=eval_rounds, fedasync_mix=DEFAULT_FEDASYNC_MIX,
             record_cohorts=record_cohorts, flat_layout=layout,
-            ring_dtype=ring_dtype)
+            ring_dtype=ring_dtype, metrics=met)
         _PROGRAM_CACHE[cache_key] = prog
         while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
             _PROGRAM_CACHE.popitem(last=False)
@@ -911,4 +1048,5 @@ def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
                   and plan.sel.spec.policy == "eps-bandit")
     args = (w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
             jnp.float32(sc.lr))
-    return prog, args, plan, layout, eval_rounds, with_state
+    timers.add("stage", time.perf_counter() - _t0)
+    return prog, args, plan, layout, eval_rounds, with_state, met

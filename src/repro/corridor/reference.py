@@ -25,7 +25,7 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
                             interpretation: str = "mixing",
                             use_kernel: bool = False,
                             batch_size: int = 128,
-                            progress=None, selection=None):
+                            progress=None, selection=None, metrics=None):
     """Multi-RSU MAFL with handover (beyond paper, DESIGN.md §8/§10).
 
     Each RSU keeps its own cohort model and applies the paper's per-arrival
@@ -40,11 +40,14 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
     rounds, l_iters, lr, n_rsus, reconcile_every, reconcile_mode,
     reconcile_tau, corridor_entry)."""
     import jax
+    import numpy as np
 
     from repro.core.client import Vehicle
-    from repro.core.mafl import SimResult, _Timeline, evaluate
+    from repro.core.mafl import SimResult, _Timeline, _host_report, evaluate
     from repro.core.server import RSUServer
     from repro.models.cnn import init_cnn
+    from repro.telemetry import metrics_requested
+    from repro.telemetry.timers import PhaseTimers
 
     mode = getattr(sc, "reconcile_mode", "fedavg")
     tau = getattr(sc, "reconcile_tau", 0.5)
@@ -70,61 +73,102 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
 
     def schedule(vehicle: int, t_download: float):
         rsu = int(corridor.serving_rsu(vehicle, t_download))
-        timeline.schedule(vehicle, t_download,
-                          payload=servers[rsu].global_params)
+        return timeline.schedule(vehicle, t_download,
+                                 payload=servers[rsu].global_params)
 
     for k in (range(p.K) if sel is None else sel.initial_vehicles()):
         schedule(k, 0.0)
 
+    timers = PhaseTimers()
+    met_req = metrics_requested(metrics)
+    ch_stale, ch_occ, ch_gap, ch_times = [], [], [], []
+    ch_rsu, ch_ho = [], []
+
     result = SimResult(scheme=f"{sc.scheme}+handover", rounds=[],
                        acc_history=[], loss_history=[])
     total = 0
-    while total < sc.rounds and len(queue):
-        ev = queue.pop()
-        local_params, _ = clients[ev.vehicle].local_update(ev.payload,
-                                                           sc.l_iters)
-        rsu = int(corridor.serving_rsu(ev.vehicle, ev.time))  # handover target
-        rec = servers[rsu].receive(
-            local_params, time=ev.time, vehicle=ev.vehicle,
-            upload_delay=ev.upload_delay, train_delay=ev.train_delay,
-            download_time=ev.download_time)
-        rec.rsu = rsu
-        total += 1
-        consensus = None
-        if total % sc.reconcile_every == 0:
-            consensus = reconcile_models([s.global_params for s in servers])
-            if mode == "ema":
-                for s in servers:
-                    s.global_params = ema_toward(s.global_params, consensus,
-                                                 tau)
-            else:
-                for s in servers:
-                    s.global_params = consensus
-        if total % eval_every == 0 or total == sc.rounds:
-            if consensus is None or mode == "ema":
+    with timers.phase("run"):
+        while total < sc.rounds and len(queue):
+            if met_req:
+                # per-RSU live slots before the pop — a pending slot's row
+                # is the RSU serving the vehicle at its *arrival* time
+                # (same rule the device bakes into the slot migration)
+                pend = list(queue.pending())
+                vs = np.array([pe.vehicle for pe in pend], np.int64)
+                ts = np.array([pe.time for pe in pend])
+                ch_occ.append(np.bincount(
+                    np.asarray(corridor.serving_rsu(vs, ts), np.int64),
+                    minlength=sc.n_rsus))
+            ev = queue.pop()
+            local_params, _ = clients[ev.vehicle].local_update(ev.payload,
+                                                               sc.l_iters)
+            rsu = int(corridor.serving_rsu(ev.vehicle, ev.time))  # handover target
+            if met_req:
+                ch_stale.append(ev.time - ev.download_time)
+                ch_gap.append(ev.time - (ch_times[-1] if ch_times else 0.0))
+                ch_times.append(ev.time)
+                ch_rsu.append(rsu)
+            rec = servers[rsu].receive(
+                local_params, time=ev.time, vehicle=ev.vehicle,
+                upload_delay=ev.upload_delay, train_delay=ev.train_delay,
+                download_time=ev.download_time)
+            rec.rsu = rsu
+            total += 1
+            consensus = None
+            if total % sc.reconcile_every == 0:
                 consensus = reconcile_models(
                     [s.global_params for s in servers])
-            acc, loss = evaluate(consensus, test_images, test_labels)
-            rec.accuracy, rec.loss = acc, loss
-            result.acc_history.append((total, acc))
-            result.loss_history.append((total, loss))
-            if progress:
-                progress(total, acc)
-        result.rounds.append(rec)
-        if sel is None:
-            schedule(ev.vehicle, ev.time)
-        else:
-            # mask at schedule (post-reconcile, like the ordinary
-            # re-download): park unadmitted vehicles, re-score at every
-            # reconcile boundary, wake newly admitted parked vehicles
-            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
-                schedule(ev.vehicle, ev.time)
-            for v in sel.maybe_reselect(total, ev.time):
-                schedule(v, ev.time)
-        timeline.prune()
+                if mode == "ema":
+                    for s in servers:
+                        s.global_params = ema_toward(s.global_params,
+                                                     consensus, tau)
+                else:
+                    for s in servers:
+                        s.global_params = consensus
+            if total % eval_every == 0 or total == sc.rounds:
+                if consensus is None or mode == "ema":
+                    consensus = reconcile_models(
+                        [s.global_params for s in servers])
+                with timers.phase("eval"):
+                    acc, loss = evaluate(consensus, test_images,
+                                         test_labels)
+                rec.accuracy, rec.loss = acc, loss
+                result.acc_history.append((total, acc))
+                result.loss_history.append((total, loss))
+                if progress:
+                    progress(total, acc)
+            result.rounds.append(rec)
+            nev = None
+            if sel is None:
+                nev = schedule(ev.vehicle, ev.time)
+            else:
+                # mask at schedule (post-reconcile, like the ordinary
+                # re-download): park unadmitted vehicles, re-score at every
+                # reconcile boundary, wake newly admitted parked vehicles
+                if sel.on_arrival(ev.vehicle, ev.upload_delay,
+                                  ev.train_delay):
+                    nev = schedule(ev.vehicle, ev.time)
+                for v in sel.maybe_reselect(total, ev.time):
+                    schedule(v, ev.time)
+            if met_req:
+                # handover = the admitted re-schedule lands on a new RSU;
+                # parked vehicles (and boundary re-admissions) don't count
+                ch_ho.append(nev is not None and int(
+                    corridor.serving_rsu(ev.vehicle, nev.time)) != rsu)
+            timeline.prune()
 
     result.final_params = reconcile_models(
         [s.global_params for s in servers])
-    if sel is not None:
-        result.extras["selection"] = sel.plan().summary()
+    sel_summary = None if sel is None else sel.plan().summary()
+    ho_count = (np.bincount(np.asarray(ch_rsu, np.int64)[
+        np.asarray(ch_ho, bool)], minlength=sc.n_rsus)
+        if met_req else None)
+    result.report = _host_report(
+        engine="serial", scheme=f"{sc.scheme}+handover", rounds=total,
+        seed=seed, metrics=metrics, met_req=met_req, p=p, timers=timers,
+        selection=sel_summary, records=result.rounds, stale=ch_stale,
+        occ=ch_occ, gap=ch_gap, times=ch_times, n_rsus=sc.n_rsus,
+        up_rsu=np.asarray(ch_rsu, np.int64) if met_req else None,
+        handover=np.asarray(ch_ho, bool) if met_req else None,
+        handover_count=ho_count)
     return result

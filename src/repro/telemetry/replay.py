@@ -1,0 +1,130 @@
+"""f64 host replay of the telemetry channels (DESIGN.md §14).
+
+The conformance oracle: re-drive the exact event timeline the planners
+dry-run (``plan_fleet`` / ``plan_corridor`` — same ``_Timeline``, same
+selection driving, same pop order) while recording the channel values the
+device accumulators must reproduce:
+
+- ``stale[r]``      pop time minus download time (f64) — binned through
+                    :func:`repro.telemetry.spec.stale_histogram` this must
+                    match the device histogram *exactly* (safe-margin edges),
+- ``occupancy[r]``  live slots at the moment of pop ``r`` (the popped
+                    upload included) — the device's ``isfinite(qt)`` count,
+- ``gap[r]``        argmin-pop wait ``times[r] - times[r-1]`` (f32 on
+                    device, so compared within the divergence-guard
+                    tolerance, not exactly),
+- corridor only: per-RSU occupancy ``[M, R]``, the per-pop handover flag
+  (re-schedule lands on a different RSU than the upload arrived on) and
+  its per-source-RSU count.
+
+Planner discipline applies (rule PLN002): everything here is pure f64
+numpy over the host timeline — no jax, no device state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.channel import ChannelParams, CorridorMobility, Mobility
+from repro.selection import make_selection_state
+
+
+def replay_fleet_channels(p: ChannelParams, seed: int, rounds: int,
+                          selection=None) -> dict:
+    """Re-drive the single-RSU fleet timeline; returns the f64 channel
+    record for ``rounds`` pops."""
+    from repro.core.mafl import _Timeline
+
+    sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
+    tl = _Timeline(p, seed)
+    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+        tl.schedule(k, 0.0)
+
+    M = rounds
+    veh = np.empty(M, np.int64)
+    stale = np.empty(M)
+    occ = np.empty(M, np.int64)
+    gap = np.empty(M)
+    times = np.empty(M)
+    prev_t = 0.0
+    for r in range(M):
+        occ[r] = len(tl.queue)            # live slots incl. the pop itself
+        ev = tl.queue.pop()
+        veh[r] = ev.vehicle
+        times[r] = ev.time
+        stale[r] = ev.time - ev.download_time
+        gap[r] = ev.time - prev_t
+        prev_t = ev.time
+        if sel is None:
+            tl.schedule(ev.vehicle, ev.time)
+        else:
+            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
+                tl.schedule(ev.vehicle, ev.time)
+            for v in sel.maybe_reselect(r + 1, ev.time):
+                tl.schedule(v, ev.time)
+        tl.prune()
+    return {"veh": veh, "times": times, "stale": stale,
+            "occupancy": occ, "gap": gap}
+
+
+def replay_corridor_channels(p: ChannelParams, n_rsus: int, seed: int,
+                             rounds: int, entry: str = "uniform",
+                             selection=None,
+                             reconcile_every: int = 0) -> dict:
+    """Re-drive the corridor timeline; adds the per-RSU channels.
+
+    A pending slot's RSU row is the cell serving the vehicle at *arrival*
+    time (positions are pure in t — the same rule the engine bakes into
+    the slot migration), so per-RSU occupancy is computable from the
+    pending events alone.  The handover flag marks an admitted
+    re-schedule whose new arrival is served by a different RSU than the
+    upload it follows; it is counted at the source RSU."""
+    from repro.core.mafl import _Timeline
+
+    corridor = CorridorMobility(p, n_rsus, entry=entry)
+    sel = make_selection_state(selection, p, corridor, seed, rounds,
+                               resel_every=reconcile_every)
+    tl = _Timeline(p, seed, distance_fn=corridor.distance)
+    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+        tl.schedule(k, 0.0)
+
+    M = rounds
+    R = n_rsus
+    veh = np.empty(M, np.int64)
+    stale = np.empty(M)
+    occ = np.zeros((M, R), np.int64)
+    gap = np.empty(M)
+    times = np.empty(M)
+    up_rsu = np.empty(M, np.int64)
+    handover = np.zeros(M, bool)
+    prev_t = 0.0
+    for r in range(M):
+        pend = list(tl.queue.pending())
+        if pend:
+            vs = np.array([pe.vehicle for pe in pend], np.int64)
+            ts = np.array([pe.time for pe in pend])
+            occ[r] = np.bincount(
+                np.asarray(corridor.serving_rsu(vs, ts), np.int64),
+                minlength=R)
+        ev = tl.queue.pop()
+        j = int(corridor.serving_rsu(ev.vehicle, ev.time))
+        veh[r] = ev.vehicle
+        times[r] = ev.time
+        up_rsu[r] = j
+        stale[r] = ev.time - ev.download_time
+        gap[r] = ev.time - prev_t
+        prev_t = ev.time
+        admitted = (sel is None
+                    or sel.on_arrival(ev.vehicle, ev.upload_delay,
+                                      ev.train_delay))
+        if admitted:
+            nev = tl.schedule(ev.vehicle, ev.time)
+            handover[r] = int(
+                corridor.serving_rsu(ev.vehicle, nev.time)) != j
+        if sel is not None:
+            for v in sel.maybe_reselect(r + 1, ev.time):
+                tl.schedule(v, ev.time)
+        tl.prune()
+    return {"veh": veh, "times": times, "stale": stale,
+            "occupancy": occ, "gap": gap, "up_rsu": up_rsu,
+            "handover": handover,
+            "handover_count": np.bincount(up_rsu[handover], minlength=R)}

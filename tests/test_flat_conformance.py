@@ -106,7 +106,7 @@ def test_flat_selection_matches_pytree_to_ulp_tolerance():
                      rounds=12, selection="weighted-topk", selection_k=3,
                      resel_every=4, flat=True)
     assert _trace(a) == _trace(b)
-    assert a.extras["selection"] == b.extras["selection"]
+    assert a.report.selection == b.report.selection
     for k in a.final_params:
         np.testing.assert_allclose(
             np.asarray(a.final_params[k]), np.asarray(b.final_params[k]),

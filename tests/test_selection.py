@@ -241,7 +241,7 @@ def _assert_selection_conformant(results):
                                    [r.time for r in ref.rounds],
                                    rtol=2e-5, atol=1e-3)
         # identical admission masks and decisions across engines
-        assert res.extras["selection"] == ref.extras["selection"], \
+        assert res.report.selection == ref.report.selection, \
             f"{name}: admission decisions diverged"
         for x, y in zip(jax.tree_util.tree_leaves(ref.final_params),
                         jax.tree_util.tree_leaves(res.final_params)):
@@ -259,7 +259,7 @@ def test_engines_conform_under_selection(stub_trainer, spec):
     results = {e: _run(world, e, 10, spec) for e in ENGINES}
     _assert_selection_conformant(results)
     # the policy actually parked somebody (the world is bigger than k)
-    assert not all(results["serial"].extras["selection"]["admit0"])
+    assert not all(results["serial"].report.selection["admit0"])
 
 
 def test_unselected_vehicles_never_appear(stub_trainer):
@@ -267,7 +267,7 @@ def test_unselected_vehicles_never_appear(stub_trainer):
     world = _world(6)
     spec = SelectionSpec(policy="weighted-topk", k=2)
     r = _run(world, "jit", 10, spec)
-    admitted = {v for v, m in enumerate(r.extras["selection"]["admit0"])
+    admitted = {v for v, m in enumerate(r.report.selection["admit0"])
                 if m}
     assert {rec.vehicle for rec in r.rounds} <= admitted
 
@@ -280,7 +280,7 @@ def test_jit_selection_plan_masks_match_host(stub_trainer):
     spec = SelectionSpec(policy="eps-bandit", k=2, eps=0.3, resel_every=3)
     plan = plan_fleet(p, 0, 9, spec)
     host = _run(world, "serial", 9, spec)
-    assert plan.sel.summary() == host.extras["selection"]
+    assert plan.sel.summary() == host.report.selection
     # bandit expectation is the f64 reward accumulation over the 9 pops
     rew_sum, rew_cnt = plan.sel_bandit
     assert rew_cnt.sum() == 9
@@ -300,7 +300,7 @@ def test_corridor_engines_conform_under_selection(stub_trainer):
                            selection_k=spec.k, selection_eps=spec.eps)
         assert ([(r.round, r.vehicle, r.rsu) for r in res.rounds]
                 == [(r.round, r.vehicle, r.rsu) for r in ref.rounds])
-        assert res.extras["selection"] == ref.extras["selection"]
+        assert res.report.selection == ref.report.selection
         for x, y in zip(jax.tree_util.tree_leaves(ref.final_params),
                         jax.tree_util.tree_leaves(res.final_params)):
             np.testing.assert_allclose(np.asarray(x), np.asarray(y),
@@ -332,7 +332,7 @@ def test_corridor_bandit_rescores_at_reconcile(stub_trainer):
                      rounds=12, eval_every=12, reconcile_every=4,
                      selection="eps-bandit", selection_k=2,
                      selection_eps=0.5)
-    decisions = r.extras["selection"]["decisions"]
+    decisions = r.report.selection["decisions"]
     assert [b for b, _, _ in decisions] == [4, 8]
 
 
@@ -363,5 +363,5 @@ def test_selection_scenarios_registered_and_run(stub_trainer):
     r = run_scenario("fleet-k1000-topk", engine="jit", seed=0, K=40,
                      rounds=6, eval_every=6, selection_k=10,
                      n_train=600, n_test=120)
-    assert r.extras["selection"]["n_admitted_final"] == 10
+    assert r.report.selection["n_admitted_final"] == 10
     assert len(r.rounds) == 6
