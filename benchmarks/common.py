@@ -52,7 +52,7 @@ def averaged_curves(scheme: str, rounds=ROUNDS, eval_every=4, params=None,
     Runs on the vehicle-batched wave engine by default (DESIGN.md §3) —
     identical event semantics to the serial engine, a fraction of the
     dispatches."""
-    accs, losses = [], []
+    accs, losses, axes = [], [], []
     for seed in seeds:
         veh, te_i, te_l, p = world(seed)
         r = run_simulation(veh, te_i, te_l, scheme=scheme, rounds=rounds,
@@ -61,8 +61,16 @@ def averaged_curves(scheme: str, rounds=ROUNDS, eval_every=4, params=None,
                            interpretation=interpretation, engine=engine)
         accs.append([a for _, a in r.acc_history])
         losses.append([l for _, l in r.loss_history])
-    rounds_axis = [rd for rd, _ in r.acc_history]
-    return (rounds_axis, np.mean(accs, axis=0).tolist(),
+        axes.append([rd for rd, _ in r.acc_history])
+    # every seed must evaluate at the same rounds: np.mean would silently
+    # average ragged rows element-by-position otherwise (or crash on a
+    # ragged array), pairing round-8 accuracy with round-12 accuracy
+    if any(ax != axes[0] for ax in axes[1:]):
+        raise ValueError(
+            "averaged_curves: per-seed eval rounds diverge — "
+            + "; ".join(f"seed {s}: {ax}" for s, ax in zip(seeds, axes))
+            + " — mean curves would mis-pair rounds; fix eval_every/rounds")
+    return (axes[0], np.mean(accs, axis=0).tolist(),
             np.mean(losses, axis=0).tolist())
 
 

@@ -28,6 +28,11 @@
                ``perf k10000-smoke`` compile-smokes fleet-k10000;
                ``perf telemetry`` measures the metrics=on/off overhead
                (DESIGN.md §14) and merges it into BENCH_perf.json.
+  sweep      — multi-world vmap sweep vs serial jit loop ->
+               BENCH_sweep.json (DESIGN.md §15): the Fig. 5 grid
+               (5 betas x 3 seeds) as ONE dispatch, wall-clock compared
+               against the solo-jit rerun loop with a bitwise
+               cross-check; QUICK=1 smokes a W=4 quick-k5 grid
 
 All committed (non-quick) BENCH_*.json artifacts are also copied to the
 repo root, where the perf-trajectory tracker reads them.
@@ -98,6 +103,11 @@ def main() -> None:
         selection_bench.run(quick=quick, **kw)
         return
 
+    if which == "sweep":
+        from benchmarks import sweep_bench
+        sweep_bench.run(quick=quick)
+        return
+
     if which == "perf":
         from benchmarks import perf_bench
         sys.exit(perf_bench.main(sys.argv[2:]))
@@ -141,6 +151,11 @@ def main() -> None:
         print("\n== Selection policy comparison ==")
         from benchmarks import selection_bench
         selection_bench.run(quick=quick)
+
+    if which == "all":
+        print("\n== Multi-world sweep engine comparison ==")
+        from benchmarks import sweep_bench
+        sweep_bench.run(quick=quick)
 
     if which == "all":
         print("\n== Flat fast-path comparison ==")

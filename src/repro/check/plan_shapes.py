@@ -55,11 +55,18 @@ def _diff(name: str, sigs: dict, findings: list, path: str) -> None:
                     f"(seed {base_seed}: {a}, seed {seed}: {b})"))
 
 
+def _tables_signature(tabs: dict) -> dict:
+    return {f"tables[{k}]": (np.asarray(v).shape, str(np.asarray(v).dtype))
+            for k, v in tabs.items()}
+
+
 def probe_plan_shapes() -> list[Finding]:
     """Run both planners across probe seeds; findings on any layout drift."""
     from repro.channel.params import ChannelParams
     from repro.core.jit_engine import plan_fleet
+    from repro.core.sweep import stack_plan_tables
     from repro.corridor.plan import plan_corridor
+    from repro.selection.policy import SelectionSpec
 
     findings: list[Finding] = []
     p = dataclasses.replace(ChannelParams(), K=5)
@@ -71,4 +78,34 @@ def probe_plan_shapes() -> list[Finding]:
     sigs = {s: _signature(plan_corridor(p, n_rsus=2, seed=s, rounds=12))
             for s in _PROBE_SEEDS}
     _diff("plan_corridor", sigs, findings, "<probe:plan_corridor>")
+
+    # padded plan-table emissions (DESIGN.md §15): the sweep tier stacks
+    # ``tables()`` across worlds, so the padded encodings must be
+    # seed-stable too — including the selection tables, whose ragged
+    # ``boundaries`` source is exactly the kind of data that drifts
+    sigs = {s: _tables_signature(plan_fleet(p, seed=s, rounds=12).tables())
+            for s in _PROBE_SEEDS}
+    _diff("FleetPlan.tables", sigs, findings, "<probe:plan_fleet>")
+
+    sigs = {s: _tables_signature(
+        plan_corridor(p, n_rsus=2, seed=s, rounds=12).tables())
+        for s in _PROBE_SEEDS}
+    _diff("CorridorPlan.tables", sigs, findings, "<probe:plan_corridor>")
+
+    spec = SelectionSpec(policy="weighted-topk", k=3, resel_every=4)
+    plans = [plan_fleet(p, seed=s, rounds=12, selection=spec)
+             for s in _PROBE_SEEDS]
+    sigs = {s: _tables_signature(plan.sel.tables(12))
+            for s, plan in zip(_PROBE_SEEDS, plans)}
+    _diff("SelectionPlan.tables", sigs, findings, "<probe:selection>")
+
+    # and the stacked batch itself: stack_plan_tables re-validates every
+    # key's (shape, dtype) — a rejection of seed-stable plans means the
+    # sweep tier could never mix these seeds in one world batch
+    try:
+        stack_plan_tables([plan.tables() for plan in plans])
+    except ValueError as e:
+        findings.append(Finding(
+            "PLN003", "<probe:stack_plan_tables>", 0,
+            f"stack_plan_tables rejected seed-stable plans: {e}"))
     return findings

@@ -99,6 +99,44 @@ class FleetPlan:
     sel: object = None          # SelectionPlan (DESIGN.md §11) or None
     sel_bandit: object = None   # (rew_sum f64[K], rew_cnt f64[K]) or None
 
+    def tables(self) -> dict:
+        """Fixed-shape padded plan tables for the multi-world sweep tier
+        (DESIGN.md §15): every array's shape depends only on ``(M, K)`` —
+        never on the seed — so per-world tables stack along a leading
+        world axis (``repro.core.sweep.stack_plan_tables``; PLN003 probes
+        the stability).  The ragged ``waves`` tuple is re-encoded as two
+        per-round columns: ``train_round[r]`` = the wave start at which
+        consumed upload ``r`` trains, ``seg_end[r]`` = the end of the
+        scan segment containing pop ``r``.  ``n_slots`` pads as a value,
+        not a shape — the sweep engine zero-pads the gain tables to the
+        batch maximum."""
+        M = len(self.veh)
+        train_round = np.full(M, -1, np.int32)
+        seg_end = np.zeros(M, np.int32)
+        for T, s, e in self.waves:
+            for t in T:
+                train_round[t] = s
+            seg_end[s:e] = e
+        return {
+            "veh": np.asarray(self.veh, np.int32),
+            "cycle": np.asarray(self.cycle, np.int32),
+            "dl_round": np.asarray(self.dl_round, np.int32),
+            "times": np.asarray(self.times, np.float64),
+            "train_delay": np.asarray(self.train_delay, np.float64),
+            "upload_delay": np.asarray(self.upload_delay, np.float64),
+            "download_time": np.asarray(self.download_time, np.float64),
+            "train_round": train_round,
+            "seg_end": seg_end,
+            "n_slots": np.asarray(self.n_slots, np.int32),
+            "q0_time": np.asarray(self.q0["time"], np.float64),
+            "q0_download_time": np.asarray(self.q0["download_time"],
+                                           np.float64),
+            "q0_upload_delay": np.asarray(self.q0["upload_delay"],
+                                          np.float64),
+            "q0_train_delay": np.asarray(self.q0["train_delay"],
+                                         np.float64),
+        }
+
 
 def plan_fleet(p: ChannelParams, seed: int, rounds: int,
                selection=None) -> FleetPlan:

@@ -294,7 +294,8 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if overrides:
         sc = dataclasses.replace(sc, **overrides)
-    if sc.ring_dtype != "f32" and (engine not in (None, "jit", "corridor")
+    if sc.ring_dtype != "f32" and (engine not in (None, "jit", "corridor",
+                                                  "vmap")
                                    or flat is False):
         raise ValueError(
             f"ring_dtype={sc.ring_dtype!r} needs the flat fast path of a "
@@ -315,10 +316,29 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
             raise ValueError(
                 f"engine {eng!r} needs a multi-RSU corridor scenario; "
                 f"{sc.name!r} has a single RSU — use one of {ENGINES}")
-        if eng not in ENGINES:
+        if eng not in ENGINES and eng != "vmap":
             raise ValueError(
-                f"unknown engine {eng!r}; expected one of {ENGINES} "
-                f"(single-RSU) or {CORRIDOR_ENGINES} (multi-RSU)")
+                f"unknown engine {eng!r}; expected one of {ENGINES} or "
+                f"'vmap' (single-RSU) or {CORRIDOR_ENGINES} (multi-RSU)")
+    if sc.n_rsus == 1 and eng == "vmap":
+        # a W=1 sweep batch (DESIGN.md §15): the world runs through the
+        # multi-world sweep program, which degenerates to the solo jit
+        # program when every channel scalar is batch-uniform — same bits
+        if use_kernel or mesh is not None or record_cohorts:
+            raise ValueError(
+                "engine='vmap' has no use_kernel/mesh/record_cohorts: "
+                "the sweep tier compiles the flat in-scan program only "
+                "(DESIGN.md §15) — run the world solo with engine='jit'")
+        if flat is False:
+            raise ValueError(
+                "engine='vmap' is flat-only: the world axis lives on the "
+                "packed [W, P] buffer (DESIGN.md §15)")
+        from repro.core.sweep import run_simulation_vmap
+        cb = None if progress is None else (
+            lambda _w, rr, acc: progress(rr, acc))
+        return _stamp(run_simulation_vmap(
+            [(sc, seed)], eval_every=eval_every, metrics=metrics,
+            progress=cb)[0], sc)
     veh, te_i, te_l, p = build_world(sc, seed=seed)
     if sc.n_rsus > 1:
         if eng == "serial":
@@ -353,3 +373,71 @@ def _stamp(result: SimResult, sc: Scenario) -> SimResult:
     if getattr(result, "report", None) is not None:
         result.report.scenario = sc.name
     return result
+
+
+# ---------------------------------------------------------------------------
+# multi-world sweeps (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SweepSpec:
+    """A grid of worlds over one base scenario.
+
+    ``variants`` is a tuple of override-sets — each itself a tuple of
+    ``(field, value)`` pairs applied to the base scenario with
+    ``dataclasses.replace`` (so e.g. a beta ablation is
+    ``variants=tuple((("channel_overrides", (("beta", b),)),)
+    for b in BETAS)``) — and every variant runs at every seed.
+    World order is variant-major: ``w = i_variant * len(seeds) + i_seed``.
+    ``overrides`` apply to the base scenario before the variants do."""
+    scenario: object = "paper-k10"        # name or Scenario
+    seeds: tuple = (0,)
+    variants: tuple = ((),)
+    overrides: tuple = ()
+    eval_every: int = 10
+
+    def worlds(self) -> list:
+        """The grid as ``[(Scenario, seed), ...]``, variant-major."""
+        sc = (get_scenario(self.scenario)
+              if isinstance(self.scenario, str) else self.scenario)
+        if self.overrides:
+            sc = dataclasses.replace(sc, **dict(self.overrides))
+        out = []
+        for var in self.variants:
+            sc_v = dataclasses.replace(sc, **dict(var)) if var else sc
+            for seed in self.seeds:
+                out.append((sc_v, int(seed)))
+        return out
+
+
+def run_sweep(spec: SweepSpec, *, engine: str = "vmap",
+              progress=None) -> list[SimResult]:
+    """Run every world of ``spec``; returns per-world ``SimResult``s in
+    variant-major order, each stamped with its scenario and carrying an
+    engine-appropriate ``RunReport``.
+
+    ``engine="vmap"`` (default) runs the whole grid as ONE compiled
+    dispatch of the multi-world sweep program (DESIGN.md §15);
+    ``engine="jit"`` runs the same worlds serially through the solo
+    engine — the conformance oracle and the benchmark baseline.  The two
+    produce bitwise-identical per-world results (pinned by
+    ``tests/test_vmap_sweep.py``).  ``progress`` fires post-hoc as
+    ``progress(world_index, round, acc)`` under either engine."""
+    worlds = spec.worlds()
+    if engine == "vmap":
+        from repro.core.sweep import run_simulation_vmap
+        results = run_simulation_vmap(worlds, eval_every=spec.eval_every,
+                                      progress=progress)
+    elif engine == "jit":
+        results = []
+        for w, (sc, seed) in enumerate(worlds):
+            cb = None if progress is None else (
+                lambda rr, acc, _w=w: progress(_w, rr, acc))
+            results.append(run_scenario(sc, seed=seed, engine="jit",
+                                        eval_every=spec.eval_every,
+                                        progress=cb))
+    else:
+        raise ValueError(
+            f"run_sweep engine must be 'vmap' or 'jit', not {engine!r}")
+    for (sc, _seed), r in zip(worlds, results):
+        _stamp(r, sc)
+    return results

@@ -40,6 +40,44 @@ class CorridorPlan:
     sel: object = None          # SelectionPlan (DESIGN.md §11) or None
     sel_bandit: object = None   # (rew_sum f64[K], rew_cnt f64[K]) or None
 
+    def tables(self) -> dict:
+        """Fixed-shape padded plan tables (DESIGN.md §15) — the corridor
+        dual of :meth:`repro.core.jit_engine.FleetPlan.tables`: shapes
+        depend only on ``(M, K)``, never on the seed, so per-world tables
+        stack along a leading world axis.  The wave partition re-encodes
+        as per-round ``train_round``/``seg_end`` columns; ``n_slots``
+        pads as a value (the engine zero-pads gain tables).  Duplicated
+        from the fleet planner deliberately — this module stays on the
+        host side of the engine-import boundary (rule PLN001)."""
+        M = len(self.veh)
+        train_round = np.full(M, -1, np.int32)
+        seg_end = np.zeros(M, np.int32)
+        for T, s, e in self.waves:
+            for t in T:
+                train_round[t] = s
+            seg_end[s:e] = e
+        return {
+            "veh": np.asarray(self.veh, np.int32),
+            "cycle": np.asarray(self.cycle, np.int32),
+            "dl_round": np.asarray(self.dl_round, np.int32),
+            "up_rsu": np.asarray(self.up_rsu, np.int32),
+            "times": np.asarray(self.times, np.float64),
+            "train_delay": np.asarray(self.train_delay, np.float64),
+            "upload_delay": np.asarray(self.upload_delay, np.float64),
+            "download_time": np.asarray(self.download_time, np.float64),
+            "train_round": train_round,
+            "seg_end": seg_end,
+            "n_slots": np.asarray(self.n_slots, np.int32),
+            "row0": np.asarray(self.row0, np.int32),
+            "q0_time": np.asarray(self.q0["time"], np.float64),
+            "q0_download_time": np.asarray(self.q0["download_time"],
+                                           np.float64),
+            "q0_upload_delay": np.asarray(self.q0["upload_delay"],
+                                          np.float64),
+            "q0_train_delay": np.asarray(self.q0["train_delay"],
+                                         np.float64),
+        }
+
 
 def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
                   entry: str = "uniform", selection=None,

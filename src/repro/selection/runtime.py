@@ -76,6 +76,23 @@ class SelectionPlan:
         """Hashable identity for program-cache keys."""
         return (self.spec, self.admit0, self.boundaries)
 
+    def tables(self, rounds: int) -> dict:
+        """Fixed-shape padded admission tables (DESIGN.md §15): the ragged
+        ``boundaries`` tuple re-encoded as ``[rounds, K]`` bool arrays so
+        per-world selection plans stack along a leading world axis —
+        ``mask[r]`` gates the re-schedule of pop ``r`` (exactly
+        :meth:`mask_for_round`), ``readmit[b, v]`` marks vehicle ``v``
+        re-admitted at boundary ``b``.  A policy-free world is the
+        all-True/all-False table pair, so heterogeneous batches mix
+        selection and no-selection worlds at stable shapes."""
+        K = len(self.admit0)
+        mask = np.stack([self.mask_for_round(r) for r in range(rounds)])
+        readmit = np.zeros((rounds, K), bool)
+        for b, newly, _ in self.boundaries:
+            if b < rounds:
+                readmit[b, list(newly)] = True
+        return {"mask": mask, "readmit": readmit}
+
     def summary(self) -> dict:
         """The ``SimResult.extras['selection']`` payload — identical
         across engines by construction (conformance asserts it), plain

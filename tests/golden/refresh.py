@@ -9,10 +9,11 @@ per-engine sha256 digest of the final model parameters.
 — and that admit-all selection is bitwise identical to no selection — so
 engine edits cannot silently change the simulation semantics.
 
-Digests are bitwise and therefore pinned to the (jax, numpy) versions
-recorded in the fixture; the test degrades the digest check to an
-accuracy check when the installed versions differ (event traces stay
-strict — they are pure host f64 and version-stable).
+Digests are bitwise and therefore pinned to the (jax, numpy) versions AND
+the codegen environment recorded in the fixture (XLA:CPU's f32 codegen is
+hardware-dependent — ``repro.core.codegen``); the tests degrade the digest
+check to an accuracy check when either differs (event traces stay strict —
+they are pure host f64 and version-stable).
 """
 from __future__ import annotations
 
@@ -27,6 +28,7 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.checkpointing.checkpoint import tree_digest  # noqa: E402
+from repro.core.codegen import codegen_fingerprint  # noqa: E402
 from repro.core.scenarios import run_scenario  # noqa: E402
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -58,6 +60,7 @@ def build_fixture(name: str, cfg: dict) -> dict:
         "eval_every": cfg["eval_every"],
         "seed": 0,
         "versions": {"jax": jax.__version__, "numpy": np.__version__},
+        "codegen": codegen_fingerprint(),
         "engines": {},
     }
     for engine in cfg["engines"]:

@@ -21,6 +21,7 @@ import numpy as np
 import pytest
 
 from repro.checkpointing.checkpoint import tree_digest
+from repro.core.codegen import codegen_matches
 from repro.core.scenarios import run_scenario
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
@@ -46,8 +47,13 @@ def _run(name, engine, flat, **kw):
 
 
 def _versions_match(fx) -> bool:
-    return fx["versions"] == {"jax": jax.__version__,
-                              "numpy": np.__version__}
+    """Digest-comparison gate: library versions AND codegen environment
+    must both match the fixture (``repro.core.codegen``) — the committed
+    digests are pinned to the fixture machine's hardware-dependent f32
+    codegen.  The flat==pytree and trace assertions stay unconditional."""
+    return (fx["versions"] == {"jax": jax.__version__,
+                               "numpy": np.__version__}
+            and codegen_matches(fx.get("codegen")))
 
 
 def _device_engines(name):
