@@ -28,6 +28,10 @@
                ``perf k10000-smoke`` compile-smokes fleet-k10000;
                ``perf telemetry`` measures the metrics=on/off overhead
                (DESIGN.md §14) and merges it into BENCH_perf.json.
+  faults     — fault-injection comparison -> BENCH_faults.json
+               (DESIGN.md §16): clean-vs-flaky ms/round overhead on
+               fleet-k1000 (exit 1 past the +10% bar) + accuracy under
+               churn per admission policy; QUICK=1 smokes quick-k5
   sweep      — multi-world vmap sweep vs serial jit loop ->
                BENCH_sweep.json (DESIGN.md §15): the Fig. 5 grid
                (5 betas x 3 seeds) as ONE dispatch, wall-clock compared
@@ -103,6 +107,12 @@ def main() -> None:
         selection_bench.run(quick=quick, **kw)
         return
 
+    if which == "faults":
+        from benchmarks import faults_bench
+        argv = sys.argv[2:]
+        kw = {"rounds": int(argv[0])} if argv else {}
+        sys.exit(faults_bench.main(quick=quick, **kw))
+
     if which == "sweep":
         from benchmarks import sweep_bench
         sweep_bench.run(quick=quick)
@@ -151,6 +161,11 @@ def main() -> None:
         print("\n== Selection policy comparison ==")
         from benchmarks import selection_bench
         selection_bench.run(quick=quick)
+
+    if which == "all":
+        print("\n== Fault-injection comparison ==")
+        from benchmarks import faults_bench
+        faults_bench.run(quick=quick)
 
     if which == "all":
         print("\n== Multi-world sweep engine comparison ==")

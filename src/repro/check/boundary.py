@@ -514,15 +514,19 @@ def _planner_import_ok(module_name: str) -> bool:
 
 
 def _planner_lint(mod: _Module, scope, findings: list,
-                  check_imports: bool = True):
-    """PLN001/PLN002 over ``scope`` (a module or one function body)."""
+                  check_imports: bool = True,
+                  import_rule: str = "PLN001",
+                  purity_rule: str = "PLN002"):
+    """PLN001/PLN002 over ``scope`` (a module or one function body).  The
+    fault planner modules run the identical lint under the FLT001 rule id
+    (the faults dual, DESIGN.md §16)."""
     for node in ast.walk(scope):
         if check_imports and isinstance(node, ast.Import):
             for alias in node.names:
                 if (not _planner_import_ok(alias.name)
                         or alias.name.split(".")[0] == "jax"):
                     findings.append(Finding(
-                        "PLN001", mod.path, node.lineno,
+                        import_rule, mod.path, node.lineno,
                         f"planner imports {alias.name!r}: planners stay "
                         "pure host numpy (f64)"))
         elif check_imports and isinstance(node, ast.ImportFrom):
@@ -530,25 +534,25 @@ def _planner_lint(mod: _Module, scope, findings: list,
             if (not _planner_import_ok(name)
                     or name.split(".")[0] == "jax"):
                 findings.append(Finding(
-                    "PLN001", mod.path, node.lineno,
+                    import_rule, mod.path, node.lineno,
                     f"planner imports from {name!r}: planners stay pure "
                     "host numpy (f64)"))
         elif isinstance(node, ast.Attribute):
             if node.attr == "float32":
                 findings.append(Finding(
-                    "PLN002", mod.path, node.lineno,
+                    purity_rule, mod.path, node.lineno,
                     "f32 drop inside the f64 planner (timelines are "
                     "exact only in f64)"))
         elif isinstance(node, ast.Name) and node.id == "jnp":
             findings.append(Finding(
-                "PLN002", mod.path, node.lineno,
+                purity_rule, mod.path, node.lineno,
                 "jnp usage inside the f64 planner (device types leak "
                 "into the timeline)"))
         elif (isinstance(node, ast.Constant)
                 and isinstance(node.value, str)
                 and node.value in F32_STRINGS):
             findings.append(Finding(
-                "PLN002", mod.path, node.lineno,
+                purity_rule, mod.path, node.lineno,
                 "'float32' dtype string inside the f64 planner"))
 
 
@@ -646,6 +650,9 @@ def check_source(path: str, source: str) -> list[Finding]:
 
     if config.matches(path, config.PLANNER_MODULES):
         _planner_lint(mod, mod.tree, findings)
+    if config.matches(path, config.FAULT_PLANNER_MODULES):
+        _planner_lint(mod, mod.tree, findings,
+                      import_rule="FLT001", purity_rule="FLT001")
     for suffix, fns in config.PLANNER_FUNCTIONS.items():
         if config.matches(path, (suffix,)):
             for d in mod.defs:

@@ -32,6 +32,17 @@ PLANNER_FUNCTIONS = {
     "repro/core/jit_engine.py": ("plan_fleet",),
 }
 
+# Fault planner modules (FLT001, DESIGN.md §16): the stochastic
+# client-state sampler is the fault dual of the PLN planners — pure host
+# f64 numpy, no engine/kernel/jax imports, no f32 drop.  Same lint as
+# PLN001/PLN002, reported under the FLT001 rule id.
+FAULT_PLANNER_MODULES = (
+    "repro/faults/__init__.py",
+    "repro/faults/spec.py",
+    "repro/faults/runtime.py",
+    "repro/faults/replay.py",
+)
+
 # Imports a planner may take from repro.* — everything else under repro (and
 # jax) is engine internals from the planner's point of view.
 PLANNER_ALLOWED_REPRO_IMPORTS = (
@@ -39,6 +50,7 @@ PLANNER_ALLOWED_REPRO_IMPORTS = (
     "repro.selection",
     "repro.core.mafl",       # _Timeline: the shared f64 event-queue replay
     "repro.telemetry",       # MetricsSpec is plan data (DESIGN.md §14)
+    "repro.faults",          # fault tables are plan data (DESIGN.md §16)
 )
 
 # Functions with donated buffers: name -> donated positional-argument index

@@ -115,6 +115,15 @@ _rule("TEL001", "metrics-off-not-legacy",
       "share one executable bitwise (DESIGN.md §14)",
       "telemetry_off")
 
+# -- fault-injection discipline (boundary lint + staged probes) -------------
+_rule("FLT001", "fault-planner-discipline",
+      "fault tables must be sampled in the host f64 planner only — no "
+      "engine/kernel/jax imports and no f32 inside repro.faults (duals of "
+      "PLN001/PLN002), fault-table shapes stable across seeds (the PLN003 "
+      "extension the vmap tier needs), and faults=None staging the exact "
+      "legacy program (the TEL001 dual) — DESIGN.md §16",
+      "boundary+faults_off+plan_shapes")
+
 
 @dataclass
 class Finding:

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.check.findings import Finding
 
-_EXEMPT = ("waves", "n_slots", "sel", "sel_bandit", "q0")
+_EXEMPT = ("waves", "n_slots", "sel", "sel_bandit", "q0", "flt")
 _PROBE_SEEDS = (0, 1)
 
 
@@ -40,7 +40,8 @@ def _signature(plan) -> dict:
     return sig
 
 
-def _diff(name: str, sigs: dict, findings: list, path: str) -> None:
+def _diff(name: str, sigs: dict, findings: list, path: str,
+          rule: str = "PLN003") -> None:
     base_seed = _PROBE_SEEDS[0]
     base = sigs[base_seed]
     for seed, sig in sigs.items():
@@ -50,7 +51,7 @@ def _diff(name: str, sigs: dict, findings: list, path: str) -> None:
             a, b = base.get(field), sig.get(field)
             if a != b:
                 findings.append(Finding(
-                    "PLN003", path, 0,
+                    rule, path, 0,
                     f"{name}: field {field!r} unstable across seeds "
                     f"(seed {base_seed}: {a}, seed {seed}: {b})"))
 
@@ -108,4 +109,29 @@ def probe_plan_shapes() -> list[Finding]:
         findings.append(Finding(
             "PLN003", "<probe:stack_plan_tables>", 0,
             f"stack_plan_tables rejected seed-stable plans: {e}"))
+
+    # fault-table shape stability (rule FLT001, DESIGN.md §16): the padded
+    # fault tables and the i32[rounds, 4] counter rows must depend only on
+    # (rounds, K, l_iters), never on the seed, so the vmap tier can stack
+    # per-world fault plans later
+    from repro.faults import named_profile
+    fspec = named_profile("flaky")
+
+    def _fault_sig(flt_plan, rounds, l_iters):
+        ct = flt_plan.counts_table(l_iters)
+        return {**_tables_signature(flt_plan.tables(rounds)),
+                "counts_table": (ct.shape, str(ct.dtype))}
+
+    sigs = {s: _fault_sig(
+        plan_fleet(p, seed=s, rounds=12, faults=fspec, l_iters=2).flt,
+        12, 2) for s in _PROBE_SEEDS}
+    _diff("FaultPlan.tables (fleet)", sigs, findings,
+          "<probe:fault_tables>", rule="FLT001")
+
+    sigs = {s: _fault_sig(
+        plan_corridor(p, n_rsus=2, seed=s, rounds=12, faults=fspec,
+                      reconcile_every=4).flt, 12, 1)
+        for s in _PROBE_SEEDS}
+    _diff("FaultPlan.tables (corridor)", sigs, findings,
+          "<probe:fault_tables>", rule="FLT001")
     return findings

@@ -42,7 +42,8 @@ def run_checks(paths: list[str], *, probes: bool = True):
     timings["pallas_race"] = time.perf_counter() - t0
 
     if probes:
-        from repro.check import dtype_flow, plan_shapes, telemetry_off
+        from repro.check import (dtype_flow, faults_off, plan_shapes,
+                                 telemetry_off)
 
         t0 = time.perf_counter()
         findings.extend(plan_shapes.probe_plan_shapes())
@@ -55,6 +56,10 @@ def run_checks(paths: list[str], *, probes: bool = True):
         t0 = time.perf_counter()
         findings.extend(telemetry_off.probe_telemetry_off())
         timings["telemetry_off"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        findings.extend(faults_off.probe_faults_off())
+        timings["faults_off"] = time.perf_counter() - t0
 
     sources = {}
     for f in files:

@@ -52,23 +52,47 @@ def _part(p) -> str:
 
 def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3,
                     meta: dict | None = None) -> str:
+    """Write ``ckpt_NNNNNNNN.npz`` (+ optional sidecar json) atomically.
+
+    Both files are written to ``.tmp`` siblings, fsynced, and published
+    with ``os.replace`` — a process killed mid-write can never leave a
+    truncated checkpoint where ``latest_checkpoint`` would find it.  The
+    npz replace is the commit point: the sidecar json (when given) is
+    published first, so any visible npz already has its sidecar."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **_flatten(tree))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **_flatten(tree))
+        f.flush()
+        os.fsync(f.fileno())
     if meta is not None:
-        with open(path + ".json", "w") as f:
+        jtmp = path + ".json.tmp"
+        with open(jtmp, "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(jtmp, path + ".json")
+    os.replace(tmp, path)
     _retain(directory, keep)
     return path
 
 
 def _retain(directory: str, keep: int):
-    ckpts = sorted(f for f in os.listdir(directory)
-                   if re.fullmatch(r"ckpt_\d+\.npz", f))
+    names = os.listdir(directory)
+    ckpts = sorted(f for f in names if re.fullmatch(r"ckpt_\d+\.npz", f))
     for old in ckpts[:-keep]:
         os.remove(os.path.join(directory, old))
         if os.path.exists(os.path.join(directory, old + ".json")):
             os.remove(os.path.join(directory, old + ".json"))
+    # orphaned .tmp siblings from a killed writer are dead weight, never
+    # visible to latest_checkpoint — sweep them on the next save
+    for stale in names:
+        if re.fullmatch(r"ckpt_\d+\.npz(\.json)?\.tmp", stale):
+            try:
+                os.remove(os.path.join(directory, stale))
+            except FileNotFoundError:
+                pass
 
 
 def latest_checkpoint(directory: str) -> str | None:

@@ -72,6 +72,38 @@ _local_scan_jit = jax.jit(_local_scan)
 _local_scan_vmap = jax.jit(jax.vmap(_local_scan, in_axes=(0, 0, 0, None)))
 
 
+def _local_scan_partial(params, images, labels, lr, n_ep):
+    """Partial-computation variant (faults, DESIGN.md §16): the same l-step
+    unrolled scan, but only the first ``n_ep`` updates apply — deadline
+    semantics, so the dispatch shape and the per-vehicle minibatch draws
+    are identical to the full scan and only steps >= n_ep become no-ops.
+    Kept separate from ``_local_scan`` so faults-off runs retain the legacy
+    scan's object identity (program-cache keys, rule FLT001)."""
+    def body(carry, batch):
+        p, step, last = carry
+        img, lab = batch
+
+        def loss_fn(q):
+            return cross_entropy_loss(cnn_forward(q, img), lab)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        live = step < n_ep
+        p = jax.tree_util.tree_map(
+            lambda w, g: jnp.where(live, w - lr * g, w), p, grads)
+        last = jnp.where(live, loss, last)
+        return (p, step + 1, last), loss
+
+    init = (params, jnp.int32(0), jnp.float32(0.0))
+    (params, _, last), _ = jax.lax.scan(body, init, (images, labels),
+                                        unroll=True)
+    return params, last
+
+
+_local_scan_partial_jit = jax.jit(_local_scan_partial)
+_local_scan_partial_vmap = jax.jit(
+    jax.vmap(_local_scan_partial, in_axes=(0, 0, 0, None, 0)))
+
+
 class Vehicle:
     """One FL client.  ``local_update`` = l iterations of Eq. (1)+(2)."""
 
@@ -96,15 +128,24 @@ class Vehicle:
                         for _ in range(l_iters)])
         return self.data.images[sel], self.data.labels[sel]
 
-    def local_update(self, global_params, l_iters: int):
+    def local_update(self, global_params, l_iters: int, n_ep=None):
+        """``n_ep`` truncates the update to the first n_ep of the l_iters
+        steps (partial computation, faults); the minibatches for all
+        l_iters steps are drawn regardless so the RNG stream stays aligned
+        with the fault-free run."""
         imgs, labs = self.sample_batches(l_iters)
-        params, loss = _local_scan_jit(global_params, jnp.asarray(imgs),
-                                       jnp.asarray(labs), self.lr)
+        if n_ep is None:
+            params, loss = _local_scan_jit(global_params, jnp.asarray(imgs),
+                                           jnp.asarray(labs), self.lr)
+        else:
+            params, loss = _local_scan_partial_jit(
+                global_params, jnp.asarray(imgs), jnp.asarray(labs),
+                self.lr, jnp.int32(n_ep))
         return params, float(loss)
 
 
 def local_update_many(payloads: Sequence, batches: Sequence, lr: float,
-                      chunk: int = 16):
+                      chunk: int = 16, n_eps: Sequence | None = None):
     """Train a wave of vehicles with a bounded number of compiled programs.
 
     ``payloads``: per-vehicle global-model snapshots (pytrees of identical
@@ -116,7 +157,11 @@ def local_update_many(payloads: Sequence, batches: Sequence, lr: float,
     for the whole simulation; the remainder reuses the serial-engine scan
     program per event (on a compute-bound host, looping a short remainder
     is cheaper than padding it to ``chunk``).  Returns the list of updated
-    pytrees and the final losses."""
+    pytrees and the final losses.
+
+    ``n_eps`` (faults, partial computation): matching per-vehicle epoch
+    counts; when given, every update runs the masked partial scan (a
+    count equal to l_iters is bitwise the full update)."""
     outs, losses = [], []
     n = len(payloads)
     full = (n // chunk) * chunk if chunk > 1 else 0
@@ -127,15 +172,24 @@ def local_update_many(payloads: Sequence, batches: Sequence, lr: float,
                           for b in batches[s:s + chunk]])
         labs = jnp.stack([jnp.asarray(b[1])
                           for b in batches[s:s + chunk]])
-        out, ls = _local_scan_vmap(stacked, imgs, labs, lr)
+        if n_eps is None:
+            out, ls = _local_scan_vmap(stacked, imgs, labs, lr)
+        else:
+            eps = jnp.asarray(n_eps[s:s + chunk], dtype=jnp.int32)
+            out, ls = _local_scan_partial_vmap(stacked, imgs, labs, lr, eps)
         ls = np.asarray(ls)
         outs.extend(jax.tree_util.tree_map(lambda x, i=i: x[i], out)
                     for i in range(chunk))
         losses.extend(float(l) for l in ls)
     for i in range(full, n):
-        params, loss = _local_scan_jit(payloads[i],
-                                       jnp.asarray(batches[i][0]),
-                                       jnp.asarray(batches[i][1]), lr)
+        if n_eps is None:
+            params, loss = _local_scan_jit(payloads[i],
+                                           jnp.asarray(batches[i][0]),
+                                           jnp.asarray(batches[i][1]), lr)
+        else:
+            params, loss = _local_scan_partial_jit(
+                payloads[i], jnp.asarray(batches[i][0]),
+                jnp.asarray(batches[i][1]), lr, jnp.int32(n_eps[i]))
         outs.append(params)
         losses.append(float(loss))
     return outs, losses

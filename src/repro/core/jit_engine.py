@@ -98,6 +98,7 @@ class FleetPlan:
     q0: dict                    # initial per-vehicle slot arrays
     sel: object = None          # SelectionPlan (DESIGN.md §11) or None
     sel_bandit: object = None   # (rew_sum f64[K], rew_cnt f64[K]) or None
+    flt: object = None          # FaultPlan (DESIGN.md §16) or None
 
     def tables(self) -> dict:
         """Fixed-shape padded plan tables for the multi-world sweep tier
@@ -139,27 +140,33 @@ class FleetPlan:
 
 
 def plan_fleet(p: ChannelParams, seed: int, rounds: int,
-               selection=None) -> FleetPlan:
+               selection=None, faults=None, l_iters: int = 5) -> FleetPlan:
     """Dry-run ``rounds`` arrivals (no payloads, no training) and derive the
     pop order, the wave partition, and the initial queue slots.  With a
     selection policy the replay drives a :class:`SelectionState`, so the
     admission masks, re-admission schedule, and (bandit) expected reward
-    accumulators come out as static plan data."""
+    accumulators come out as static plan data; a fault model drives a
+    :class:`FaultState` the same way (DESIGN.md §16), so dropped/blackout
+    suppressions, recovery sweeps, staleness-cap verdicts, per-cycle epoch
+    counts, and straggler delay inflation are all plan data too."""
     from repro.core.mafl import _Timeline
+    from repro.faults import arrival_step, initial_vehicles, make_fault_state
 
     sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
-    tl = _Timeline(p, seed)
-    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+    flt = make_fault_state(faults, p, seed, rounds, l_iters)
+    tl = _Timeline(p, seed, cl_scale=None if flt is None else flt.cl_scale)
+    for k in initial_vehicles(sel, flt, p.K):
         tl.schedule(k, 0.0)
 
     ev0 = tl.queue.as_struct_arrays()
-    if sel is None:
+    if sel is None and flt is None:
         assert len(np.unique(ev0["vehicle"])) == p.K, \
             "slot queue invariant: one in-flight upload per vehicle"
     # full-K slot arrays; parked vehicles hold +inf (never popped) until a
     # re-admission boundary writes them a live slot.  train_delay comes from
     # Eq. 8 directly — bit-identical to the event values, and defined for
-    # parked vehicles too (the in-program re-admission needs it).
+    # parked vehicles too (the in-program re-admission needs it); the
+    # straggler multipliers (faults) scale it exactly as the timeline does.
     q0 = {
         "time": np.full(p.K, np.inf),
         "download_time": np.zeros(p.K),
@@ -167,6 +174,8 @@ def plan_fleet(p: ChannelParams, seed: int, rounds: int,
         "train_delay": np.array(
             [training_delay(p, i) for i in range(1, p.K + 1)]),
     }
+    if flt is not None:
+        q0["train_delay"] = q0["train_delay"] * flt.cl_scale
     q0["time"][ev0["vehicle"]] = ev0["time"]
     q0["download_time"][ev0["vehicle"]] = ev0["download_time"]
     q0["upload_delay"][ev0["vehicle"]] = ev0["upload_delay"]
@@ -187,17 +196,25 @@ def plan_fleet(p: ChannelParams, seed: int, rounds: int,
         times[r], c_l[r], c_u[r] = ev.time, ev.train_delay, ev.upload_delay
         dlt[r] = ev.download_time
         last_pop[ev.vehicle] = r
-        if sel is None:
+        if sel is None and flt is None:
             tl.schedule(ev.vehicle, ev.time)
         else:
-            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
-                tl.schedule(ev.vehicle, ev.time)
-            for v in sel.maybe_reselect(r + 1, ev.time):
+            if flt is not None:
+                flt.on_pop(ev.vehicle, r)
+
+            def _readmit(v, t=ev.time, r=r):
                 # a re-admitted vehicle downloads the post-round-r model,
                 # so its next pop's payload is ring[r+1] — same indexing
                 # rule as an ordinary re-download
-                tl.schedule(v, ev.time)
+                tl.schedule(v, t)
                 last_pop[v] = r
+
+            arrival_step(
+                sel, flt, r=r, vehicle=ev.vehicle, time=ev.time,
+                upload_delay=ev.upload_delay, train_delay=ev.train_delay,
+                pending=len(tl.queue),
+                schedule=lambda v, t=ev.time: tl.schedule(v, t),
+                readmit=_readmit)
         tl.prune()
 
     # Wave partition — identical to the batched engine's rule: a wave trains
@@ -220,7 +237,8 @@ def plan_fleet(p: ChannelParams, seed: int, rounds: int,
                      waves=tuple(waves), n_slots=tl.gains.last_slot + 3,
                      q0=q0, sel=None if sel is None else sel.plan(),
                      sel_bandit=None if sel is None
-                     else sel.bandit_expectation())
+                     else sel.bandit_expectation(),
+                     flt=None if flt is None else flt.plan())
 
 
 # ---------------------------------------------------------------------------
@@ -241,9 +259,14 @@ def _mesh_key(mesh) -> tuple:
     return (tuple(mesh.shape.items()),)
 
 
-def _wave_train(local_scan, mesh, n_events, shared: bool):
+def _wave_train(local_scan, mesh, n_events, shared: bool,
+                partial: bool = False):
     """The wave-training block: vmap over events, optionally sharded over
     the mesh ``"data"`` axis via shard_map (DESIGN.md §5, §9).
+
+    ``partial=True`` (faults, DESIGN.md §16) selects the masked partial
+    scan — the trainer takes a per-event epoch-count vector as a trailing
+    argument, mapped over the event axis like the minibatches.
 
     The trained weights pass through an ``optimization_barrier``: without
     it XLA:CPU re-fuses the SGD epilogue (``w - lr*g``) into whatever
@@ -253,11 +276,11 @@ def _wave_train(local_scan, mesh, n_events, shared: bool):
     training outputs at their jit-call boundaries by construction; the
     barrier gives the device programs the same property, making the flat
     fast path bitwise against the pytree path."""
-    axes = (None if shared else 0, 0, 0, None)
+    axes = (None if shared else 0, 0, 0, None) + ((0,) if partial else ())
     vf = jax.vmap(local_scan, in_axes=axes)
 
-    def f(pay, imgs, labs, lr):
-        loc, losses = vf(pay, imgs, labs, lr)
+    def f(pay, imgs, labs, lr, *eps):
+        loc, losses = vf(pay, imgs, labs, lr, *eps)
         return jax.lax.optimization_barrier((loc, losses))
     if mesh is None or "data" not in mesh.shape:
         return f
@@ -268,8 +291,9 @@ def _wave_train(local_scan, mesh, n_events, shared: bool):
     from jax.sharding import PartitionSpec as P
 
     pay_spec = P() if shared else P("data")
-    return shard_map(f, mesh=mesh,
-                     in_specs=(pay_spec, P("data"), P("data"), P()),
+    in_specs = ((pay_spec, P("data"), P("data"), P())
+                + ((P("data"),) if partial else ()))
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
                      out_specs=(P("data"), P("data")), check_rep=False)
 
 
@@ -311,7 +335,7 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                    interpretation: str, use_kernel: bool, mesh,
                    fedasync_mix: float, flat_layout=None,
                    ring_dtype: str = "f32", eval_rounds: tuple = (),
-                   metrics=None):
+                   metrics=None, l_iters: int = 1):
     """Trace-time constants live in the closure; the returned function is
     cached on the plan/world structure so repeated runs of the same world
     (determinism tests, warm benchmarks) compile exactly once.
@@ -349,13 +373,38 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
     # divergence guard can prove the device saw the same reward stream.
     sel_active = plan.sel is not None and not plan.sel.is_noop
     with_state = sel_active and plan.sel.spec.policy == "eps-bandit"
-    if sel_active:
-        adm_tab = jnp.asarray(
-            np.stack([plan.sel.mask_for_round(r) for r in range(M)]))
-        readmit_at = {b: np.asarray(n, np.int32)
-                      for b, n, _ in plan.sel.boundaries if len(n)}
+
+    # faults (DESIGN.md §16): the exact same fold as selection.  Dropped
+    # and blacked-out re-schedules AND into the admission table (the
+    # suppressed vehicle's slot goes +inf), recovery sweeps merge into the
+    # boundary re-admission map, the staleness-cap verdicts become a
+    # static keep column gating each pop's aggregation, and per-cycle
+    # epoch counts feed the masked partial trainer.  flt is None on the
+    # off path, so every branch below vanishes and the program is
+    # textually the legacy one (rule FLT001, the TEL001 dual).
+    from repro.faults import fold_admission, fold_readmits
+
+    flt_plan = plan.flt
+    flt_on = flt_plan is not None
+    has_partial = flt_on and flt_plan.spec.has_partial
+    has_cap = flt_on and flt_plan.spec.has_cap
+    adm_active = sel_active or (flt_on and flt_plan.timeline_active)
+    if adm_active:
+        adm = (np.stack([plan.sel.mask_for_round(r) for r in range(M)])
+               if sel_active else np.ones((M, K), bool))
+        if flt_on and flt_plan.timeline_active:
+            adm = fold_admission(adm, flt_plan, plan.veh)
+        adm_tab = jnp.asarray(adm)
+        readmit_at = {b: np.asarray(vs, np.int32)
+                      for b, vs in fold_readmits(
+                          plan.sel if sel_active else None,
+                          flt_plan if flt_on else None).items() if len(vs)}
     else:
         readmit_at = {}
+    if has_cap:
+        keep_tab = jnp.asarray(np.asarray(flt_plan.keep, bool))
+    if has_partial:
+        ep_tab = jnp.asarray(np.asarray(flt_plan.epochs, np.int32))
 
     # telemetry (DESIGN.md §14): the same fold as selection — a static
     # MetricsSpec from the host planner, fixed-shape accumulators appended
@@ -366,6 +415,12 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
     if met_on:
         from repro.telemetry import device as tel_dev
         met_edges = jnp.asarray(metrics.edges, jnp.float32)
+    # fault counters (DESIGN.md §16): per-pop i32[4] increments from the
+    # fault plan, accumulated in the metrics carry and conformance-checked
+    # against the f64 fault replay after the run
+    fct_on = met_on and metrics.fault_counters and flt_on
+    if fct_on:
+        fct_tab = jnp.asarray(flt_plan.counts_table(l_iters))
 
     def eq36_upload_delay(gains, x0, idx, t_up):
         """Eq. 3-6 re-schedule pipeline: slot gain -> position wrap ->
@@ -444,7 +499,8 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
 
         def program_flat(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs,
                          lr):
-            local_scan = client_mod._local_scan
+            local_scan = (client_mod._local_scan_partial if has_partial
+                          else client_mod._local_scan)
             g = layout.pack(w0)                 # f32[P] master weights
             locals_buf = jnp.zeros((M, layout.P), store_dtype)
             mst = ring_stats = None
@@ -495,9 +551,13 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                         else:
                             weight = jnp.float32(1.0)
                     else:
-                        # Eq. 10+11 on the packed buffer, one vector op
-                        g, weight = aggregate(g, locals_buf[r], t, cu, cl,
-                                              dl_t)
+                        # Eq. 10+11 on the packed buffer, one vector op;
+                        # a cap-discarded pop keeps the old master exactly
+                        # (the host skips the update outright)
+                        g_new, weight = aggregate(g, locals_buf[r], t, cu,
+                                                  cl, dl_t)
+                        g = (jnp.where(keep_tab[r], g_new, g) if has_cap
+                             else g_new)
                     if with_state:
                         rew = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
                         rs = rs.at[i].add(rew)
@@ -505,7 +565,7 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                     t_up = t + cl
                     cu_new = eq36_upload_delay(gains, x0, i, t_up)
                     t_new = t_up + cu_new
-                    if sel_active:
+                    if adm_active:
                         t_new = jnp.where(adm_tab[r, i], t_new, jnp.inf)
                     qt = qt.at[i].set(t_new)
                     qdl = qdl.at[i].set(t)
@@ -518,8 +578,9 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                                else (g, qt, qdl, qcu))
                     ys = (i, t, cu, cl, dl_t, weight)
                     if met_on:
-                        mst, gap = tel_dev.fleet_pop(mst, met_edges,
-                                                     t=t, dl_t=dl_t)
+                        mst, gap = tel_dev.fleet_pop(
+                            mst, met_edges, t=t, dl_t=dl_t,
+                            fault_row=fct_tab[r] if fct_on else None)
                         out = out + (mst,)
                         ys = ys + (occ, gap)
                     return out, ys
@@ -542,9 +603,11 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                     else:
                         pay = layout.unpack(jnp.stack(
                             [snaps[int(pr)] for pr in pay_rounds]))
-                    train = _wave_train(local_scan, mesh, len(T), shared)
+                    train = _wave_train(local_scan, mesh, len(T), shared,
+                                        partial=has_partial)
+                    extra = (ep_tab[jnp.asarray(T)],) if has_partial else ()
                     with jax.named_scope(f"wave_train_{s}"):
-                        loc, _ = train(pay, imgs[T], labs[T], lr)
+                        loc, _ = train(pay, imgs[T], labs[T], lr, *extra)
                     locals_buf = locals_buf.at[jnp.asarray(T)].set(
                         layout.pack(loc, dtype=store_dtype))
                 seg_traces = []
@@ -599,6 +662,11 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                     cc, dd = chain_coeffs(scheme, interpretation, p.beta,
                                           w_c, t=t_c, dl_t=dlt_c,
                                           fedasync_mix=fedasync_mix)
+                    if has_cap:
+                        # cap-discarded pops become exact chain no-ops
+                        keep_seg = keep_tab[s:e]
+                        cc = jnp.where(keep_seg, cc, 1.0)
+                        dd = jnp.where(keep_seg, dd, 0.0)
                     coeffs = jnp.stack([cc, dd], axis=1)
                     with jax.named_scope(f"ring_chain_{s}_{e}"):
                         g = _chain_segment(g, locals_buf, coeffs, snaps,
@@ -618,6 +686,8 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                         [tr[6] for tr in traces]),
                     "gap": jnp.concatenate([tr[7] for tr in traces]),
                 }
+                if fct_on:
+                    met_out["fault_counts"] = mst[2]
                 if ring_stats is not None:
                     met_out.update(ring_stats.out())
                 ret = ret + (met_out,)
@@ -626,7 +696,8 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
         return jax.jit(program_flat)
 
     def program(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, lr):
-        local_scan = client_mod._local_scan
+        local_scan = (client_mod._local_scan_partial if has_partial
+                      else client_mod._local_scan)
         ring = jax.tree_util.tree_map(
             lambda x: jnp.zeros((M + 1,) + x.shape, x.dtype).at[0].set(x), w0)
         locals_buf = jax.tree_util.tree_map(
@@ -659,7 +730,16 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                     occ = jnp.sum(jnp.isfinite(qt)).astype(jnp.int32)
                 t, cu, cl, dl_t = qt[i], qcu[i], qcl[i], qdl[i]
                 loc = jax.tree_util.tree_map(lambda B: B[r], locals_buf)
-                g, weight = aggregate(g, loc, t, cu, cl, dl_t)  # Eq. 10+11
+                g_new, weight = aggregate(g, loc, t, cu, cl,
+                                          dl_t)             # Eq. 10+11
+                if has_cap:
+                    # cap-discarded pop: the global model stays exactly
+                    # put (the host skips the update outright)
+                    g = jax.tree_util.tree_map(
+                        lambda old, new: jnp.where(keep_tab[r], new, old),
+                        g, g_new)
+                else:
+                    g = g_new
                 ring = jax.tree_util.tree_map(
                     lambda R, G: R.at[r + 1].set(G), ring, g)
                 if with_state:
@@ -672,9 +752,10 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                 t_up = t + cl
                 cu_new = eq36_upload_delay(gains, x0, i, t_up)
                 t_new = t_up + cu_new
-                if sel_active:
+                if adm_active:
                     # admission mask folded into the slot queue: a parked
-                    # vehicle's slot is +inf, invisible to the argmin
+                    # (or dropped / blacked-out) vehicle's slot is +inf,
+                    # invisible to the argmin
                     t_new = jnp.where(adm_tab[r, i], t_new, jnp.inf)
                 qt = qt.at[i].set(t_new)
                 qdl = qdl.at[i].set(t)
@@ -683,8 +764,9 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                        else (g, ring, qt, qdl, qcu))
                 ys = (i, t, cu, cl, dl_t, weight)
                 if met_on:
-                    mst, gap = tel_dev.fleet_pop(mst, met_edges,
-                                                 t=t, dl_t=dl_t)
+                    mst, gap = tel_dev.fleet_pop(
+                        mst, met_edges, t=t, dl_t=dl_t,
+                        fault_row=fct_tab[r] if fct_on else None)
                     out = out + (mst,)
                     ys = ys + (occ, gap)
                 return out, ys
@@ -711,9 +793,11 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                 else:
                     idx = jnp.asarray(pay_rounds)
                     pay = jax.tree_util.tree_map(lambda R: R[idx], ring)
-                train = _wave_train(local_scan, mesh, len(T), shared)
+                train = _wave_train(local_scan, mesh, len(T), shared,
+                                    partial=has_partial)
+                extra = (ep_tab[jnp.asarray(T)],) if has_partial else ()
                 with jax.named_scope(f"wave_train_{s}"):
-                    loc, _ = train(pay, imgs[T], labs[T], lr)
+                    loc, _ = train(pay, imgs[T], labs[T], lr, *extra)
                 T_dev = jnp.asarray(T)
                 locals_buf = jax.tree_util.tree_map(
                     lambda B, L: B.at[T_dev].set(L), locals_buf, loc)
@@ -756,6 +840,8 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
                 "occupancy": jnp.concatenate([tr[6] for tr in traces]),
                 "gap": jnp.concatenate([tr[7] for tr in traces]),
             }
+            if fct_on:
+                met_out["fault_counts"] = mst[2]
             ret = ret + (met_out,)
         return ret
 
@@ -764,12 +850,14 @@ def _build_program(plan: FleetPlan, p: ChannelParams, *, scheme: str,
 
 def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
                  use_kernel, mesh, fedasync_mix, shapes, flat_layout=None,
-                 ring_dtype="f32", eval_rounds=(), metrics=None):
+                 ring_dtype="f32", eval_rounds=(), metrics=None,
+                 l_iters=1):
     # the trainer function rides in the key as the object itself, not its
     # id(): ids are reused after GC, which could silently replay a program
     # traced against a different (monkeypatched) trainer.  metrics=off is
     # normalized to None *before* this key, so an off run shares the legacy
-    # executable object outright (rule TEL001).
+    # executable object outright (rule TEL001); faults=off likewise
+    # contributes a constant None (rule FLT001).
     key = (plan.waves, tuple(plan.dl_round.tolist()), plan.n_slots, p,
            scheme, interpretation, use_kernel, fedasync_mix,
            _mesh_key(mesh), shapes,
@@ -777,7 +865,9 @@ def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
            client_mod._local_scan,
            None if flat_layout is None else flat_layout.signature(),
            ring_dtype, eval_rounds if flat_layout is not None else (),
-           None if metrics is None else metrics.signature())
+           None if metrics is None else metrics.signature(),
+           None if plan.flt is None else (plan.flt.signature(), l_iters,
+                                          client_mod._local_scan_partial))
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
         prog = _build_program(plan, p, scheme=scheme,
@@ -785,7 +875,8 @@ def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
                               use_kernel=use_kernel, mesh=mesh,
                               fedasync_mix=fedasync_mix,
                               flat_layout=flat_layout, ring_dtype=ring_dtype,
-                              eval_rounds=eval_rounds, metrics=metrics)
+                              eval_rounds=eval_rounds, metrics=metrics,
+                              l_iters=l_iters)
         _PROGRAM_CACHE[key] = prog
         while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
             _PROGRAM_CACHE.popitem(last=False)
@@ -797,7 +888,7 @@ def _get_program(plan: FleetPlan, p: ChannelParams, *, scheme, interpretation,
 def _stage_run(vehicles_data, *, scheme, rounds, l_iters, lr, params, seed,
                eval_every, use_kernel, init_params, interpretation,
                batch_size, mesh, selection, flat, ring_dtype,
-               metrics=None, timers=None):
+               metrics=None, faults=None, timers=None):
     """Validate, plan, and stage one fleet run — everything up to (but not
     including) executing the compiled program.  Split out of
     :func:`run_simulation_jit` so ``repro.check.dtype_flow`` can build the
@@ -829,13 +920,15 @@ def _stage_run(vehicles_data, *, scheme, rounds, l_iters, lr, params, seed,
         raise ValueError("rounds must be >= 1")
 
     with timers.phase("plan"):
-        plan = plan_fleet(p, seed, rounds, selection)
+        plan = plan_fleet(p, seed, rounds, selection, faults=faults,
+                          l_iters=l_iters)
         # the telemetry spec is plan data (DESIGN.md §14): histogram edges
         # derive from the dry run's f64 staleness/pop times, and metrics=off
         # normalizes to None — the exact legacy program
         met = resolve_metrics(
             metrics, stale=plan.times - plan.download_time,
-            times=plan.times, n_rsus=1, ring_guard=(ring_dtype == "bf16"))
+            times=plan.times, n_rsus=1, ring_guard=(ring_dtype == "bf16"),
+            fault_counters=plan.flt is not None)
     M = rounds
 
     _t0 = time.perf_counter()
@@ -873,7 +966,8 @@ def _stage_run(vehicles_data, *, scheme, rounds, l_iters, lr, params, seed,
                         use_kernel=use_kernel, mesh=mesh,
                         fedasync_mix=DEFAULT_FEDASYNC_MIX, shapes=shapes,
                         flat_layout=layout, ring_dtype=ring_dtype,
-                        eval_rounds=eval_rounds, metrics=met)
+                        eval_rounds=eval_rounds, metrics=met,
+                        l_iters=l_iters)
     with_state = (plan.sel is not None and not plan.sel.is_noop
                   and plan.sel.spec.policy == "eps-bandit")
     args = (w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, jnp.float32(lr))
@@ -906,6 +1000,7 @@ def run_simulation_jit(
     flat: bool = True,
     ring_dtype: str = "f32",
     metrics=None,
+    faults=None,
 ):
     """Run M rounds entirely on device; returns the same ``SimResult`` the
     host engines produce (same record fields, same eval cadence).
@@ -930,7 +1025,15 @@ def run_simulation_jit(
     argmin-pop wait traces accumulate in fixed-shape carry state, surfaced
     on ``result.report.channels``.  Any falsy value ("off"/None/False)
     stages the *exact* legacy program — same cache entry, bitwise-identical
-    outputs (pinned by ``tests/test_telemetry.py``)."""
+    outputs (pinned by ``tests/test_telemetry.py``).
+
+    ``faults`` activates the fault-injection layer (DESIGN.md §16): the
+    host f64 planner samples the stochastic client-state processes into
+    static fault tables folded into the program exactly like selection —
+    suppressed re-schedules via the admission table, recovery sweeps via
+    boundary re-admissions, staleness-cap discards via a keep column, and
+    partial computation via the masked epoch trainer.  Off stages the
+    exact legacy program (rule FLT001, pinned by ``tests/test_faults.py``)."""
     from repro.core.mafl import SimResult, evaluate
     from repro.telemetry import RunReport, memory_stats
     from repro.telemetry.report import wave_stats
@@ -943,7 +1046,7 @@ def run_simulation_jit(
         use_kernel=use_kernel, init_params=init_params,
         interpretation=interpretation, batch_size=batch_size, mesh=mesh,
         selection=selection, flat=flat, ring_dtype=ring_dtype,
-        metrics=metrics, timers=timers)
+        metrics=metrics, faults=faults, timers=timers)
     M = rounds
     with timers.phase("run"):
         out = jax.block_until_ready(prog(*args))
@@ -1025,10 +1128,28 @@ def run_simulation_jit(
                     progress(rr, acc)
             result.rounds.append(rec)
     sel_summary = None if plan.sel is None else plan.sel.summary()
+    flt_plan = plan.flt
+    flt_report = None
+    if flt_plan is not None:
+        import dataclasses
+        result.extras["faults"] = flt_plan.summary(l_iters)
+        flt_report = {"spec": dataclasses.asdict(flt_plan.spec),
+                      "counts": flt_plan.counts(l_iters)}
     p = params or ChannelParams()
     channels = {}
     if met is not None:
         channels = {k: np.asarray(v) for k, v in met_dev.items()}
+        if flt_plan is not None and "fault_counts" in channels:
+            # fault-counter divergence guard (DESIGN.md §16): the scan-
+            # carry accumulators must reproduce the f64 fault replay's
+            # totals — disagreement means the device consumed a different
+            # pop sequence than the fault tables were planned for
+            exp = flt_plan.counts_table(l_iters).sum(axis=0)
+            if not np.array_equal(channels["fault_counts"], exp):
+                raise RuntimeError(
+                    "jit engine: device fault counters diverged from the "
+                    f"host fault replay ({channels['fault_counts']} vs "
+                    f"{exp})")
         # bandit-style reward trace derived from the pop trace — the
         # per-arrival quality signal the selection layer would score
         # (gamma^(cu-1) * zeta^(cl-1)), published whether or not a
@@ -1043,6 +1164,7 @@ def run_simulation_jit(
         metrics_on=met is not None,
         spec=None if met is None else met.to_json(),
         phases=timers.snapshot(), memory=memory_stats(),
-        selection=sel_summary, waves=wave_stats(plan.waves, p.K),
+        selection=sel_summary, faults=flt_report,
+        waves=wave_stats(plan.waves, p.K),
         channels=channels)
     return result

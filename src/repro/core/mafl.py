@@ -44,6 +44,7 @@ from repro.channel import (ChannelParams, Mobility, RayleighAR1,
 from repro.core.client import Vehicle, VehicleData, local_update_many
 from repro.core.events import EventQueue
 from repro.core.server import RSUServer
+from repro.faults import arrival_step, initial_vehicles, make_fault_state
 from repro.models.cnn import cnn_forward, init_cnn
 from repro.selection import make_selection_state
 
@@ -135,6 +136,7 @@ def run_simulation(
     flat: bool = True,
     ring_dtype: str = "f32",
     metrics=None,
+    faults=None,
 ) -> SimResult:
     """Run M rounds of the chosen aggregation scheme (Algorithm 1).
 
@@ -153,7 +155,13 @@ def run_simulation(
     telemetry channels (DESIGN.md §14); the host engines collect them in
     f64 alongside the event loop, the device engines accumulate them in
     the scan carry.  Off is the exact legacy path; phase timers and the
-    ``result.report`` record are always attached."""
+    ``result.report`` record are always attached.
+
+    ``faults`` (None/'off' | profile name | ``FaultSpec``) activates the
+    fault-injection layer (DESIGN.md §16): seeded stochastic dropout,
+    blackout, partial computation, straggler inflation and staleness-cap
+    discard, identical decision-for-decision on every engine.  Off is the
+    exact legacy path."""
     from repro.telemetry import metrics_requested
     from repro.telemetry.timers import PhaseTimers
 
@@ -170,7 +178,8 @@ def run_simulation(
             eval_every=eval_every, use_kernel=use_kernel,
             init_params=init_params, interpretation=interpretation,
             progress=progress, batch_size=batch_size, selection=selection,
-            flat=flat, ring_dtype=ring_dtype, metrics=metrics)
+            flat=flat, ring_dtype=ring_dtype, metrics=metrics,
+            faults=faults)
     if ring_dtype != "f32":
         # the bf16 snapshot ring exists only on the packed flat layout of
         # the device engines (DESIGN.md §12) — an explicit gate, never a
@@ -201,22 +210,25 @@ def run_simulation(
     ch_times: list = []
 
     sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
-    timeline = _Timeline(p, seed)
+    flt = make_fault_state(faults, p, seed, rounds, l_iters)
+    timeline = _Timeline(p, seed,
+                         cl_scale=None if flt is None else flt.cl_scale)
     queue = timeline.queue
     if engine == "batched":
         # The event timeline depends only on the channel/mobility/data-size
         # processes, never on training results — so a cheap time-only dry
         # run tells us *exactly* which (vehicle, cycle) uploads the M
         # rounds consume, and the wave engine trains nothing else.  (The
-        # replay carries its own SelectionState, so admission decisions are
-        # reproduced byte-for-byte.)
+        # replay carries its own SelectionState/FaultState, so admission
+        # and fault decisions are reproduced byte-for-byte.)
         with timers.phase("plan"):
-            consumed = _consumed_events(p, seed, rounds, selection)
+            consumed = _consumed_events(p, seed, rounds, selection,
+                                        faults=faults, l_iters=l_iters)
 
     def schedule(vehicle: int, t_download: float):
         timeline.schedule(vehicle, t_download, server.global_params)
 
-    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+    for k in initial_vehicles(sel, flt, p.K):
         schedule(k, 0.0)
 
     result = SimResult(scheme=scheme, rounds=[], acc_history=[],
@@ -227,6 +239,7 @@ def run_simulation(
 
         ``ev.local_params`` must already hold the local update trained from
         the stale payload snapshot."""
+        r = server.round                    # 0-based index of this pop
         if met_req:
             # the pop already happened (+1) and the re-schedule has not:
             # the same instant the device engines count isfinite slots at
@@ -234,10 +247,13 @@ def run_simulation(
             ch_stale.append(ev.time - ev.download_time)
             ch_gap.append(ev.time - (ch_times[-1] if ch_times else 0.0))
             ch_times.append(ev.time)
+        # staleness-cap verdict BEFORE aggregation: a discarded arrival
+        # still counts as a round, only the model update is skipped
+        keep = True if flt is None else flt.on_pop(ev.vehicle, r)[0]
         rec = server.receive(
             ev.local_params, time=ev.time, vehicle=ev.vehicle,
             upload_delay=ev.upload_delay, train_delay=ev.train_delay,
-            download_time=ev.download_time)
+            download_time=ev.download_time, discard=not keep)
         ev.local_params = ev.payload = None
         if server.round % eval_every == 0 or server.round == rounds:
             with timers.phase("eval"):
@@ -248,16 +264,13 @@ def run_simulation(
             result.loss_history.append((server.round, loss))
             if progress:
                 progress(server.round, acc)
-        if sel is None:
-            # vehicle immediately downloads the fresh global model (Fig. 2)
-            schedule(ev.vehicle, ev.time)
-        else:
-            # mask at schedule: re-download only while admitted; epoch
-            # boundaries re-score and wake newly admitted parked vehicles
-            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
-                schedule(ev.vehicle, ev.time)
-            for v in sel.maybe_reselect(server.round, ev.time):
-                schedule(v, ev.time)
+        # mask at schedule: the vehicle re-downloads the fresh global model
+        # (Fig. 2) only while admitted AND live; epoch boundaries re-score,
+        # recovery sweeps wake dark vehicles whose blackout has passed
+        arrival_step(sel, flt, r=r, vehicle=ev.vehicle, time=ev.time,
+                     upload_delay=ev.upload_delay,
+                     train_delay=ev.train_delay, pending=len(queue),
+                     schedule=lambda v: schedule(v, ev.time))
         timeline.prune()
 
     if engine in ("serial", "unbatched"):
@@ -269,7 +282,10 @@ def run_simulation(
                 # the ordering and delays follow the event times
                 # (DESIGN.md §2).
                 ev.local_params, _ = clients[ev.vehicle].local_update(
-                    ev.payload, l_iters)
+                    ev.payload, l_iters,
+                    n_ep=(flt.epoch_of(ev.vehicle)
+                          if flt is not None and flt.spec.has_partial
+                          else None))
                 consume(ev)
     else:
         with timers.phase("run"):
@@ -285,9 +301,16 @@ def run_simulation(
                     key=lambda ev: (ev.time, ev.seq))
                 batches = [clients[ev.vehicle].sample_batches(l_iters)
                            for ev in untrained]
+                # partial computation (DESIGN.md §16): the epoch count of
+                # each pending cycle was fixed at its schedule, so the wave
+                # can read it here — all l_iters batches are still drawn
+                # (RNG-stream alignment across engines)
+                n_eps = ([flt.epoch_of(ev.vehicle) for ev in untrained]
+                         if flt is not None and flt.spec.has_partial
+                         else None)
                 outs, losses = local_update_many(
                     [ev.payload for ev in untrained], batches, lr,
-                    chunk=wave_chunk)
+                    chunk=wave_chunk, n_eps=n_eps)
                 for ev, out, lo in zip(untrained, outs, losses):
                     ev.local_params, ev.local_loss = out, lo
                 # Drain in time order until an event without a precomputed
@@ -313,18 +336,22 @@ def run_simulation(
     result.rounds = server.rounds
     result.final_params = server.global_params
     sel_summary = None if sel is None else sel.plan().summary()
+    flt_plan = None if flt is None else flt.plan()
+    if flt_plan is not None:
+        result.extras["faults"] = flt_plan.summary(l_iters)
     result.report = _host_report(
         engine=engine, scheme=scheme, rounds=rounds, seed=seed,
         metrics=metrics, met_req=met_req, p=p, timers=timers,
         selection=sel_summary, records=result.rounds, stale=ch_stale,
-        occ=ch_occ, gap=ch_gap, times=ch_times)
+        occ=ch_occ, gap=ch_gap, times=ch_times, faults=flt_plan,
+        l_iters=l_iters)
     return result
 
 
 def _host_report(*, engine, scheme, rounds, seed, metrics, met_req, p,
                  timers, selection, records, stale, occ, gap, times,
                  n_rsus=1, up_rsu=None, handover=None,
-                 handover_count=None):
+                 handover_count=None, faults=None, l_iters=1):
     """Build the host engines' :class:`RunReport` (DESIGN.md §14): f64
     channels collected alongside the event loop, bucketed through the same
     planner edges the device path would use (identical by construction —
@@ -337,10 +364,15 @@ def _host_report(*, engine, scheme, rounds, seed, metrics, met_req, p,
                        seed=seed, metrics_on=met_req,
                        phases=timers.snapshot(), memory=memory_stats(),
                        selection=selection)
+    if faults is not None:
+        import dataclasses
+        report.faults = {"spec": dataclasses.asdict(faults.spec),
+                         "counts": faults.counts(l_iters)}
     if met_req:
         st = np.asarray(stale)
         spec = resolve_metrics(metrics, stale=st, times=np.asarray(times),
-                               n_rsus=n_rsus)
+                               n_rsus=n_rsus,
+                               fault_counters=faults is not None)
         report.spec = spec.to_json()
         channels = {
             "stale_hist": stale_histogram(spec.edges, st, rsu=up_rsu,
@@ -375,12 +407,16 @@ class _Timeline:
     event window (``SlotGainCache``): pops are globally time-ordered, so
     slots below the earliest pending event can never be read again."""
 
-    def __init__(self, p: ChannelParams, seed: int, distance_fn=None):
+    def __init__(self, p: ChannelParams, seed: int, distance_fn=None,
+                 cl_scale=None):
         self.p = p
         self.distance = distance_fn or Mobility(p).distance
         self.gains = SlotGainCache(RayleighAR1(p, seed=seed))
         self.queue = EventQueue()
         self._cycle = [0] * p.K
+        # per-vehicle straggler multipliers on the Eq. 8 training delay
+        # (DESIGN.md §16) — f64, constant over the run, default identity
+        self.cl_scale = cl_scale
 
     def schedule(self, vehicle: int, t_download: float, payload=None):
         """Vehicle downloads w_g at t_download, trains C_l, uploads C_u.
@@ -392,6 +428,8 @@ class _Timeline:
         p = self.p
         i1 = vehicle + 1                                    # 1-based index
         c_l = training_delay(p, i1)
+        if self.cl_scale is not None:
+            c_l = c_l * float(self.cl_scale[vehicle])
         t_up = t_download + c_l
         gain = self.gains.at(t_up)[vehicle]
         rate = shannon_rate(p, gain, self.distance(vehicle, t_up))
@@ -408,25 +446,32 @@ class _Timeline:
 
 
 def _consumed_events(p: ChannelParams, seed: int, rounds: int,
-                     selection=None) -> set[tuple[int, int]]:
+                     selection=None, faults=None,
+                     l_iters: int = 5) -> set[tuple[int, int]]:
     """Dry-run the timeline (no training, no payloads): the exact set of
     (vehicle, cycle) uploads consumed within ``rounds`` arrivals.  With a
-    selection policy, the replay drives an identical ``SelectionState`` so
-    parked cycles never enter the set."""
-    tl = _Timeline(p, seed)
+    selection policy or a fault model, the replay drives identical
+    ``SelectionState``/``FaultState`` instances so parked, dropped, and
+    blacked-out cycles never enter the set."""
+    flt = make_fault_state(faults, p, seed, rounds, l_iters)
+    tl = _Timeline(p, seed, cl_scale=None if flt is None else flt.cl_scale)
     sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
-    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+    for k in initial_vehicles(sel, flt, p.K):
         tl.schedule(k, 0.0)
     out: set[tuple[int, int]] = set()
     while len(out) < rounds and len(tl.queue):
         ev = tl.queue.pop()
+        r = len(out)
         out.add((ev.vehicle, ev.cycle))
-        if sel is None:
+        if flt is not None:
+            flt.on_pop(ev.vehicle, r)
+        if sel is None and flt is None:
             tl.schedule(ev.vehicle, ev.time)
         else:
-            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
-                tl.schedule(ev.vehicle, ev.time)
-            for v in sel.maybe_reselect(len(out), ev.time):
-                tl.schedule(v, ev.time)
+            arrival_step(
+                sel, flt, r=r, vehicle=ev.vehicle, time=ev.time,
+                upload_delay=ev.upload_delay, train_delay=ev.train_delay,
+                pending=len(tl.queue),
+                schedule=lambda v, t=ev.time: tl.schedule(v, t))
         tl.prune()
     return out

@@ -32,6 +32,7 @@ from repro.channel import ChannelParams, CorridorMobility
 from repro.core.mafl import ENGINES, SimResult, run_simulation
 from repro.corridor.engine import run_corridor_simulation
 from repro.corridor.reference import run_handover_simulation
+from repro.faults import scenario_faults
 
 # legacy alias: the corridor geometry now lives in channel/mobility.py as
 # the public, vectorized CorridorMobility (it used to be an ad-hoc
@@ -86,6 +87,12 @@ class Scenario:
     # ring + upload buffers around f32 master weights — an explicit
     # opt-in, never a default precision change
     ring_dtype: str = "f32"
+    # fault injection (DESIGN.md §16): name of a FaultSpec profile from
+    # ``repro.faults.PROFILES`` (None = the fault-free world — the engines
+    # compile the identical program and share its cache entry), plus
+    # dataclasses.replace(...) override pairs applied to the profile
+    faults: Optional[str] = None
+    faults_overrides: tuple = ()
     # dataclasses.replace(...) overrides applied to ChannelParams
     channel_overrides: tuple = ()
 
@@ -255,6 +262,37 @@ register(Scenario(
     scale=0.0015, max_per_vehicle=128, n_train=4000, n_test=400,
     corridor_entry="rush", channel_overrides=(("platoon", 50),),
 ))
+register(dataclasses.replace(
+    get_scenario("fleet-k1000"),
+    name="fleet-k1000-flaky",
+    description="Mega-fleet under flaky connectivity (DESIGN.md §16): "
+                "8% of uploads drop mid-flight and vehicles fall into "
+                "Gilbert-Elliott blackouts (~30 s mean), with uploads "
+                "staler than 12 rounds discarded at the RSU — the "
+                "graceful-degradation baseline for the faults bench.",
+    faults="flaky",
+))
+register(dataclasses.replace(
+    get_scenario("corridor-rush-hour-r8-k4000"),
+    name="corridor-rush-hour-deadzone-r8-k4000",
+    description="Rush hour on the mega-corridor with coverage dead zones "
+                "(DESIGN.md §16): 10% blackout entry per cycle with ~60 s "
+                "mean outages — a platoon that enters a dead zone goes "
+                "dark as a block — and a 16-round staleness cap at every "
+                "RSU; recovered vehicles re-admit at reconcile "
+                "boundaries.",
+    faults="deadzone",
+))
+register(dataclasses.replace(
+    get_scenario("fleet-k1000"),
+    name="fleet-k1000-throttled",
+    description="Mega-fleet under compute throttling (DESIGN.md §16): "
+                "half the training cycles finish only a prefix of the "
+                "local epochs (partial computation), 30% of vehicles are "
+                "4x stragglers, and an 8-round staleness cap discards "
+                "what arrives too late.",
+    faults="throttled",
+))
 
 
 def build_world(sc: Scenario, seed: int = 0):
@@ -290,10 +328,15 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
     the device engines' packed-buffer fast path (DESIGN.md §12); ``None``
     means the engine default (flat on).  ``metrics="on"`` enables the
     telemetry channels (DESIGN.md §14) on every engine; the returned
-    ``result.report`` is stamped with the scenario name."""
+    ``result.report`` is stamped with the scenario name.  A scenario with
+    a ``faults`` profile (DESIGN.md §16) threads the resolved
+    :class:`~repro.faults.spec.FaultSpec` into every engine
+    (``engine='vmap'`` rejects fault worlds — the sweep tier has no
+    per-world program structure)."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if overrides:
         sc = dataclasses.replace(sc, **overrides)
+    flt = scenario_faults(sc)
     if sc.ring_dtype != "f32" and (engine not in (None, "jit", "corridor",
                                                   "vmap")
                                    or flat is False):
@@ -352,12 +395,12 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
             return _stamp(run_handover_simulation(
                 sc, veh, te_i, te_l, p, seed=seed, eval_every=eval_every,
                 use_kernel=use_kernel, progress=progress,
-                metrics=metrics), sc)
+                metrics=metrics, faults=flt), sc)
         return _stamp(run_corridor_simulation(
             sc, veh, te_i, te_l, p, seed=seed, eval_every=eval_every,
             use_kernel=use_kernel, mesh=mesh,
             record_cohorts=record_cohorts, progress=progress, flat=flat,
-            metrics=metrics), sc)
+            metrics=metrics, faults=flt), sc)
     kw = {} if flat is None else {"flat": flat}
     return _stamp(run_simulation(
         veh, te_i, te_l, scheme=sc.scheme,
@@ -365,7 +408,8 @@ def run_scenario(scenario: str | Scenario, *, seed: int = 0,
         params=p, seed=seed, eval_every=eval_every,
         use_kernel=use_kernel, engine=eng,
         progress=progress, selection=sc.selection_spec(),
-        ring_dtype=sc.ring_dtype, metrics=metrics, **kw), sc)
+        ring_dtype=sc.ring_dtype, metrics=metrics, faults=flt,
+        **kw), sc)
 
 
 def _stamp(result: SimResult, sc: Scenario) -> SimResult:

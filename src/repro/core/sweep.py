@@ -474,6 +474,14 @@ def run_simulation_vmap(worlds, *, eval_every: int = 10, batch_size: int = 128,
         raise ValueError(
             f"engine='vmap' supports schemes {_SUPPORTED_SCHEMES}, not "
             f"{sc0.scheme!r} (fedbuff keeps host-side buffer state)")
+    from repro.faults import scenario_faults
+    if any(scenario_faults(sc) is not None for sc in scs):
+        raise ValueError(
+            "engine='vmap' does not support fault injection yet: the "
+            "fault folds (admission, staleness-cap, partial epochs) are "
+            "per-world program structure the [W, P] world axis does not "
+            "model (DESIGN.md §15/§16) — run the world solo with "
+            "engine='jit', faults=...")
     if sc0.ring_dtype not in ("f32", "bf16"):
         raise ValueError(f"unknown ring_dtype {sc0.ring_dtype!r}")
     ps = [sc.channel() for sc in scs]

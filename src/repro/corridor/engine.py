@@ -102,7 +102,7 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                    reconcile_tau: float, eval_rounds: tuple,
                    fedasync_mix: float, record_cohorts: bool,
                    flat_layout=None, ring_dtype: str = "f32",
-                   metrics=None):
+                   metrics=None, l_iters: int = 1):
     """Trace-time constants live in the closure; cached per world structure
     like the jit engine's program.
 
@@ -146,6 +146,22 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
     sel_active = plan.sel is not None and not plan.sel.is_noop
     with_state = sel_active and plan.sel.spec.policy == "eps-bandit"
 
+    # faults (DESIGN.md §16): the exact same fold as the jit engine.
+    # Suppressed re-schedules AND into the admission table, recovery
+    # sweeps merge into the boundary re-admission map (recoveries run at
+    # reconcile boundaries, which are already scan-segment splits), the
+    # staleness-cap verdicts gate each pop's cohort-row update, and the
+    # per-cycle epoch counts feed the masked partial trainer.  flt is
+    # None on the off path, so every branch below vanishes and the
+    # program is textually the legacy one (rule FLT001).
+    from repro.faults import fold_admission, fold_readmits
+
+    flt_plan = plan.flt
+    flt_on = flt_plan is not None
+    has_partial = flt_on and flt_plan.spec.has_partial
+    has_cap = flt_on and flt_plan.spec.has_cap
+    adm_active = sel_active or (flt_on and flt_plan.timeline_active)
+
     # telemetry fold (DESIGN.md §14): every metrics branch below is gated
     # on this *static* flag, so ``metrics=None`` traces a program textually
     # identical to the legacy one (rule TEL001 — bitwise off path)
@@ -153,13 +169,28 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
     if met_on:
         from repro.telemetry import device as tel_dev
         met_edges = jnp.asarray(metrics.edges, jnp.float32)
-    if sel_active:
-        adm_tab = jnp.asarray(
-            np.stack([plan.sel.mask_for_round(r) for r in range(M)]))
-        readmit_at = {b: np.asarray(n, np.int32)
-                      for b, n, _ in plan.sel.boundaries if len(n)}
+    if adm_active:
+        adm = (np.stack([plan.sel.mask_for_round(r) for r in range(M)])
+               if sel_active else np.ones((M, K), bool))
+        if flt_on and flt_plan.timeline_active:
+            adm = fold_admission(adm, flt_plan, plan.veh)
+        adm_tab = jnp.asarray(adm)
+        readmit_at = {b: np.asarray(vs, np.int32)
+                      for b, vs in fold_readmits(
+                          plan.sel if sel_active else None,
+                          flt_plan if flt_on else None).items() if len(vs)}
     else:
         readmit_at = {}
+    if has_cap:
+        keep_tab = jnp.asarray(np.asarray(flt_plan.keep, bool))
+    if has_partial:
+        ep_tab = jnp.asarray(np.asarray(flt_plan.epochs, np.int32))
+    # fault counters (DESIGN.md §16): per-pop i32[4] increments from the
+    # fault plan, accumulated in the metrics carry and conformance-checked
+    # against the f64 fault replay after the run
+    fct_on = met_on and metrics.fault_counters and flt_on
+    if fct_on:
+        fct_tab = jnp.asarray(flt_plan.counts_table(l_iters))
 
     if n_shards > 1:
         from jax.experimental.shard_map import shard_map
@@ -268,6 +299,13 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             row = jnp.where(owned, j - off, 0)
             grow = jax.tree_util.tree_map(lambda Gl: Gl[row], G)
             new_row, weight = aggregate(grow, loc, t, cu, cl, dl_t)
+            if has_cap:
+                # a cap-discarded pop keeps the cohort row exactly (the
+                # host skips the update outright); the ring contribution
+                # below inherits the unchanged row
+                new_row = jax.tree_util.tree_map(
+                    lambda old, new: jnp.where(keep_tab[r], new, old),
+                    grow, new_row)
             G = jax.tree_util.tree_map(
                 lambda Gl, nr: Gl.at[row].set(
                     jnp.where(owned, nr, Gl[row])), G, new_row)
@@ -286,9 +324,10 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             cu_new = eq36_upload_delay(gains, x0, i, t_up)
             t_new = t_up + cu_new
             j_new = serving(wrap_x(i, t_new))    # handover target
-            if sel_active:
-                # admission folded into the slot queue: a parked vehicle
-                # is +inf in every RSU row, invisible to the argmin
+            if adm_active:
+                # admission folded into the slot queue: a parked (or
+                # dropped / blacked-out) vehicle is +inf in every RSU
+                # row, invisible to the argmin
                 t_new = jnp.where(adm_tab[r, i], t_new, jnp.inf)
             # slot migration: leave row j, land in row j_new
             qt = qt.at[j, i].set(jnp.inf)
@@ -303,10 +342,11 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                 # (parked vehicles never migrate; readmits are counted by
                 # neither the device nor the f64 replay)
                 ho = (j_new != j)
-                if sel_active:
+                if adm_active:
                     ho = ho & adm_tab[r, i]
-                mst, gap = tel_dev.corridor_pop(mst, met_edges, t=t,
-                                                dl_t=dl_t, j=j, handover=ho)
+                mst, gap = tel_dev.corridor_pop(
+                    mst, met_edges, t=t, dl_t=dl_t, j=j, handover=ho,
+                    fault_row=fct_tab[r] if fct_on else None)
                 out = out + (mst,)
                 ys = ys + (occ, gap, ho)
             return out, ys
@@ -425,7 +465,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
             needed |= {int(d[t]) + 1 for t in T if d[t] >= 0}
 
         def program_flat(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, lr):
-            local_scan = client_mod._local_scan
+            local_scan = (client_mod._local_scan_partial if has_partial
+                          else client_mod._local_scan)
             G = jnp.broadcast_to(layout.pack(w0)[None],
                                  (R, layout.P)).astype(jnp.float32)
             locals_buf = jnp.zeros((M, layout.P), store_dtype)
@@ -479,6 +520,10 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                         grow = G[j]
                         new_row, weight = aggregate(grow, locals_buf[r], t,
                                                     cu, cl, dl_t)
+                        if has_cap:
+                            # cap-discarded pop: the cohort row (and the
+                            # ring row reading it) stays exactly put
+                            new_row = jnp.where(keep_tab[r], new_row, grow)
                         G = G.at[j].set(new_row)
                     if with_state:
                         rew = gamma ** (cu - 1.0) * zeta ** (cl - 1.0)
@@ -490,7 +535,7 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                     x_new = jnp.mod(x0[i] + v_c * t_new + span / 2.0,
                                     span) - span / 2.0
                     j_new = serving(x_new)              # handover target
-                    if sel_active:
+                    if adm_active:
                         t_new = jnp.where(adm_tab[r, i], t_new, jnp.inf)
                     qt = qt.at[j, i].set(jnp.inf)
                     qt = qt.at[j_new, i].set(t_new)
@@ -506,10 +551,11 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                         ys = (i, j, t, cu, cl, dl_t, weight, new_row)
                     if met_on:
                         ho = (j_new != j)
-                        if sel_active:
+                        if adm_active:
                             ho = ho & adm_tab[r, i]
                         mst, gap = tel_dev.corridor_pop(
-                            mst, met_edges, t=t, dl_t=dl_t, j=j, handover=ho)
+                            mst, met_edges, t=t, dl_t=dl_t, j=j, handover=ho,
+                            fault_row=fct_tab[r] if fct_on else None)
                         out = out + (mst,)
                         ys = ys + (occ, gap, ho)
                     return out, ys
@@ -536,9 +582,11 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                     else:
                         pay = layout.unpack(jnp.stack(
                             [ring[pr] for pr in pay_rounds]))
-                    train = _wave_train(local_scan, mesh, len(T), shared)
+                    train = _wave_train(local_scan, mesh, len(T), shared,
+                                        partial=has_partial)
+                    extra = (ep_tab[jnp.asarray(T)],) if has_partial else ()
                     with jax.named_scope(f"wave_train_{s}"):
-                        loc, _ = train(pay, imgs[T], labs[T], lr)
+                        loc, _ = train(pay, imgs[T], labs[T], lr, *extra)
                     locals_buf = locals_buf.at[jnp.asarray(T)].set(
                         layout.pack(loc, dtype=store_dtype))
                 points = sorted({b for b in range(s + 1, e + 1)
@@ -581,6 +629,11 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                                 scheme, interpretation, p.beta, ys[6],
                                 t=ys[2], dl_t=ys[5],
                                 fedasync_mix=fedasync_mix)
+                            if has_cap:
+                                # cap-discarded pops become exact no-ops
+                                keep_seg = keep_tab[a:b]
+                                cc = jnp.where(keep_seg, cc, 1.0)
+                                dd = jnp.where(keep_seg, dd, 0.0)
                             coeffs = jnp.stack([cc, dd], axis=1)
                             for jr, chunks in rsu_chain_groups(
                                     plan, a, b, needed):
@@ -627,6 +680,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                     "handover": jnp.concatenate(
                         [m[2] for m in met_traces]),
                 }
+                if fct_on:
+                    met_out["fault_counts"] = mst[3]
                 if ring_stats is not None:
                     met_out.update(ring_stats.out())
                 ret = ret + (met_out,)
@@ -635,7 +690,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
         return jax.jit(program_flat)
 
     def program(w0, gains, x0, qt, qdl, qcu, qcl, imgs, labs, lr):
-        local_scan = client_mod._local_scan
+        local_scan = (client_mod._local_scan_partial if has_partial
+                      else client_mod._local_scan)
         G = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), w0)
         if n_shards > 1:
@@ -678,9 +734,11 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                     pay = jax.tree_util.tree_map(
                         lambda *xs: jnp.stack(xs),
                         *[ring[pr] for pr in pay_rounds])
-                train = _wave_train(local_scan, mesh, len(T), shared)
+                train = _wave_train(local_scan, mesh, len(T), shared,
+                                    partial=has_partial)
+                extra = (ep_tab[jnp.asarray(T)],) if has_partial else ()
                 with jax.named_scope(f"wave_train_{s}"):
-                    loc, _ = train(pay, imgs[T], labs[T], lr)
+                    loc, _ = train(pay, imgs[T], labs[T], lr, *extra)
                 T_dev = jnp.asarray(T)
                 locals_buf = jax.tree_util.tree_map(
                     lambda B, L: B.at[T_dev].set(L), locals_buf, loc)
@@ -742,6 +800,8 @@ def _build_program(plan: CorridorPlan, p: ChannelParams, *, scheme: str,
                 "gap": jnp.concatenate([tr[8] for tr in traces]),
                 "handover": jnp.concatenate([tr[9] for tr in traces]),
             }
+            if fct_on:
+                met_out["fault_counts"] = mst[3]
             ret = ret + (met_out,)
         return ret
 
@@ -770,6 +830,7 @@ def run_corridor_simulation(
     selection=None,
     flat: Optional[bool] = None,
     metrics=None,
+    faults=None,
 ):
     """Run ``sc.rounds`` corridor arrivals entirely on device; returns the
     same ``SimResult`` the serial reference produces (same record fields,
@@ -791,7 +852,15 @@ def run_corridor_simulation(
     handover counters, and pop-wait traces accumulate in fixed-shape carry
     state, surfaced on ``result.report.channels``.  Any falsy value stages
     the *exact* legacy program (same cache entry, bitwise-identical
-    outputs, rule TEL001)."""
+    outputs, rule TEL001).
+
+    ``faults`` activates the fault-injection layer (DESIGN.md §16): the
+    host f64 planner samples the stochastic client-state processes into
+    static per-round tables folded into the compiled program exactly like
+    selection — identical decisions on every engine, conformance-checked
+    against the f64 replay.  Recovery sweeps run at reconcile boundaries;
+    availability faults require ``reconcile_mode='fedavg'``.  Off is the
+    exact legacy program (rule FLT001)."""
     from repro.core.mafl import SimResult, evaluate
     from repro.telemetry import RunReport, memory_stats
     from repro.telemetry.report import wave_stats
@@ -803,7 +872,7 @@ def run_corridor_simulation(
         interpretation=interpretation, use_kernel=use_kernel,
         batch_size=batch_size, mesh=mesh, record_cohorts=record_cohorts,
         init_params=init_params, selection=selection, flat=flat,
-        metrics=metrics, timers=timers)
+        metrics=metrics, faults=faults, timers=timers)
     p = p if p is not None else sc.channel()
     scheme = sc.scheme
     R = sc.n_rsus
@@ -902,9 +971,26 @@ def run_corridor_simulation(
     if record_cohorts:
         result.extras["cohort_snapshots"] = cohort_snaps
     sel_summary = None if plan.sel is None else plan.sel.summary()
+    flt_plan = plan.flt
+    flt_report = None
+    if flt_plan is not None:
+        import dataclasses
+        flt_report = {"spec": dataclasses.asdict(flt_plan.spec),
+                      "counts": flt_plan.counts(sc.l_iters)}
+        result.extras["faults"] = flt_plan.summary(sc.l_iters)
     channels = {}
     if met is not None:
         channels = {k: np.asarray(v) for k, v in met_dev.items()}
+        if "fault_counts" in channels:
+            # fault-counter divergence guard (DESIGN.md §16): the carried
+            # i32[4] accumulator must reproduce the f64 fault replay the
+            # counts table was planned from
+            exp = flt_plan.counts_table(sc.l_iters).sum(axis=0)
+            if not np.array_equal(channels["fault_counts"], exp):
+                raise RuntimeError(
+                    "corridor engine: device fault counters diverged from "
+                    f"the host fault replay ({channels['fault_counts']} vs "
+                    f"{exp})")
         # per-arrival quality signal (Eqs. 7, 9 delay weight) — the
         # bandit-style reward trace, published for every scheme
         channels["reward"] = (p.gamma ** (t_cu.astype(np.float64) - 1.0)
@@ -917,14 +1003,15 @@ def run_corridor_simulation(
         seed=seed, metrics_on=met is not None,
         spec=None if met is None else met.to_json(),
         phases=timers.snapshot(), memory=memory_stats(),
-        selection=sel_summary, waves=wave_stats(plan.waves, p.K),
-        channels=channels)
+        selection=sel_summary, faults=flt_report,
+        waves=wave_stats(plan.waves, p.K), channels=channels)
     return result
 
 
 def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
                interpretation, use_kernel, batch_size, mesh, record_cohorts,
-               init_params, selection, flat, metrics=None, timers=None):
+               init_params, selection, flat, metrics=None, faults=None,
+               timers=None):
     """Validate, plan, and stage one corridor run — everything up to (but
     not including) executing the compiled program.  Split out of
     :func:`run_corridor_simulation` so ``repro.check.dtype_flow`` can build
@@ -950,6 +1037,8 @@ def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
     from repro.selection import check_reconcile_mode, scenario_spec
     spec = selection if selection is not None else scenario_spec(sc)
     check_reconcile_mode(spec, mode)
+    from repro.faults import check_faults_reconcile
+    check_faults_reconcile(faults, mode)
     p = p if p is not None else sc.channel()
     assert len(vehicles_data) == p.K, (len(vehicles_data), p.K)
     rounds = sc.rounds
@@ -977,11 +1066,13 @@ def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
     with timers.phase("plan"):
         plan = plan_corridor(p, R, seed, rounds, entry=entry,
                              selection=spec,
-                             reconcile_every=sc.reconcile_every)
+                             reconcile_every=sc.reconcile_every,
+                             faults=faults, l_iters=sc.l_iters)
         met = resolve_metrics(
             metrics, stale=plan.times - plan.download_time,
             times=plan.times, n_rsus=R,
-            ring_guard=(ring_dtype == "bf16"))
+            ring_guard=(ring_dtype == "bf16"),
+            fault_counters=plan.flt is not None)
     _t0 = time.perf_counter()
     M = rounds
     eval_rounds = tuple(sorted({rr for rr in range(1, M + 1)
@@ -1027,7 +1118,10 @@ def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
                  None if plan.sel is None else plan.sel.signature(),
                  client_mod._local_scan,
                  None if layout is None else layout.signature(), ring_dtype,
-                 None if met is None else met.signature())
+                 None if met is None else met.signature(),
+                 None if plan.flt is None else
+                 (plan.flt.signature(), sc.l_iters,
+                  client_mod._local_scan_partial))
     prog = _PROGRAM_CACHE.get(cache_key)
     if prog is None:
         prog = _build_program(
@@ -1037,7 +1131,7 @@ def _stage_run(sc, vehicles_data, p=None, *, seed, eval_every,
             reconcile_tau=float(getattr(sc, "reconcile_tau", 0.5)),
             eval_rounds=eval_rounds, fedasync_mix=DEFAULT_FEDASYNC_MIX,
             record_cohorts=record_cohorts, flat_layout=layout,
-            ring_dtype=ring_dtype, metrics=met)
+            ring_dtype=ring_dtype, metrics=met, l_iters=sc.l_iters)
         _PROGRAM_CACHE[cache_key] = prog
         while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
             _PROGRAM_CACHE.popitem(last=False)

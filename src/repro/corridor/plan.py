@@ -39,6 +39,7 @@ class CorridorPlan:
     row0: np.ndarray            # i32[K] initial RSU row of each vehicle's slot
     sel: object = None          # SelectionPlan (DESIGN.md §11) or None
     sel_bandit: object = None   # (rew_sum f64[K], rew_cnt f64[K]) or None
+    flt: object = None          # FaultPlan (DESIGN.md §16) or None
 
     def tables(self) -> dict:
         """Fixed-shape padded plan tables (DESIGN.md §15) — the corridor
@@ -81,32 +82,41 @@ class CorridorPlan:
 
 def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
                   entry: str = "uniform", selection=None,
-                  reconcile_every: int = 0) -> CorridorPlan:
+                  reconcile_every: int = 0, faults=None,
+                  l_iters: int = 1) -> CorridorPlan:
     """Dry-run ``rounds`` arrivals through the corridor timeline (no
     payloads, no training) and derive everything static.  With a selection
     policy the replay drives a :class:`SelectionState` that re-scores the
     fleet at every reconcile boundary (handed-over vehicles are re-scored
-    by the RSU serving them at the boundary timestamp)."""
+    by the RSU serving them at the boundary timestamp); a fault model
+    drives a :class:`FaultState` the same way (DESIGN.md §16) whose
+    recovery sweeps run at the same boundaries."""
     from repro.core.mafl import _Timeline
+    from repro.faults import arrival_step, initial_vehicles, make_fault_state
 
     corridor = CorridorMobility(p, n_rsus, entry=entry)
     # corridor worlds re-score ONLY at reconcile boundaries — the spec's
     # resel_every is never consulted here (mirrors the serial reference's
     # unconditional `resel_every=sc.reconcile_every`; 0 disables, and the
-    # compiled program splits scan segments at exactly these boundaries)
+    # compiled program splits scan segments at exactly these boundaries).
+    # Fault recovery sweeps follow the identical cadence.
     sel = make_selection_state(selection, p, corridor, seed, rounds,
                                resel_every=reconcile_every)
-    tl = _Timeline(p, seed, distance_fn=corridor.distance)
-    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+    flt = make_fault_state(faults, p, seed, rounds, l_iters,
+                           recheck_every=reconcile_every)
+    tl = _Timeline(p, seed, distance_fn=corridor.distance,
+                   cl_scale=None if flt is None else flt.cl_scale)
+    for k in initial_vehicles(sel, flt, p.K):
         tl.schedule(k, 0.0)
 
     ev0 = tl.queue.as_struct_arrays()
-    if sel is None:
+    if sel is None and flt is None:
         assert len(np.unique(ev0["vehicle"])) == p.K, \
             "slot queue invariant: one in-flight upload per vehicle"
     # full-K slot arrays; parked vehicles hold +inf until a re-admission
     # boundary writes them a live slot (train_delay from Eq. 8 directly —
-    # bit-identical to the event values, defined for parked vehicles too)
+    # bit-identical to the event values, defined for parked vehicles too;
+    # the straggler multipliers scale it exactly as the timeline does)
     q0 = {
         "time": np.full(p.K, np.inf),
         "download_time": np.zeros(p.K),
@@ -114,6 +124,8 @@ def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
         "train_delay": np.array(
             [training_delay(p, i) for i in range(1, p.K + 1)]),
     }
+    if flt is not None:
+        q0["train_delay"] = q0["train_delay"] * flt.cl_scale
     q0["time"][ev0["vehicle"]] = ev0["time"]
     q0["download_time"][ev0["vehicle"]] = ev0["download_time"]
     q0["upload_delay"][ev0["vehicle"]] = ev0["upload_delay"]
@@ -144,16 +156,24 @@ def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
         times[r], c_l[r], c_u[r] = ev.time, ev.train_delay, ev.upload_delay
         dlt[r] = ev.download_time
         last_pop[ev.vehicle] = r
-        if sel is None:
+        if sel is None and flt is None:
             tl.schedule(ev.vehicle, ev.time)
         else:
-            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
-                tl.schedule(ev.vehicle, ev.time)
-            for v in sel.maybe_reselect(r + 1, ev.time):
+            if flt is not None:
+                flt.on_pop(ev.vehicle, r)
+
+            def _readmit(v, t=ev.time, r=r):
                 # re-admitted at the (post-reconcile) boundary round — its
                 # next pop's payload is ring[r+1], the reconciled model
-                tl.schedule(v, ev.time)
+                tl.schedule(v, t)
                 last_pop[v] = r
+
+            arrival_step(
+                sel, flt, r=r, vehicle=ev.vehicle, time=ev.time,
+                upload_delay=ev.upload_delay, train_delay=ev.train_delay,
+                pending=len(tl.queue),
+                schedule=lambda v, t=ev.time: tl.schedule(v, t),
+                readmit=_readmit)
         tl.prune()
 
     # Wave partition — the jit engine's rule verbatim (DESIGN.md §9): a wave
@@ -181,7 +201,8 @@ def plan_corridor(p: ChannelParams, n_rsus: int, seed: int, rounds: int,
                         q0=q0, row0=row0,
                         sel=None if sel is None else sel.plan(),
                         sel_bandit=None if sel is None
-                        else sel.bandit_expectation())
+                        else sel.bandit_expectation(),
+                        flt=None if flt is None else flt.plan())
 
 
 def rsu_chain_groups(plan: CorridorPlan, s: int, e: int,

@@ -15,6 +15,8 @@ from typing import Sequence
 
 from repro.channel import ChannelParams, CorridorMobility
 from repro.core.hierarchical import ema_toward, reconcile_models
+from repro.faults import (arrival_step, check_faults_reconcile,
+                          initial_vehicles, make_fault_state)
 from repro.selection import (check_reconcile_mode, make_selection_state,
                              scenario_spec)
 
@@ -25,7 +27,8 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
                             interpretation: str = "mixing",
                             use_kernel: bool = False,
                             batch_size: int = 128,
-                            progress=None, selection=None, metrics=None):
+                            progress=None, selection=None, metrics=None,
+                            faults=None):
     """Multi-RSU MAFL with handover (beyond paper, DESIGN.md §8/§10).
 
     Each RSU keeps its own cohort model and applies the paper's per-arrival
@@ -54,6 +57,7 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
     entry = getattr(sc, "corridor_entry", "uniform")
     spec = selection if selection is not None else scenario_spec(sc)
     check_reconcile_mode(spec, mode)
+    check_faults_reconcile(faults, mode)
 
     init = init_cnn(jax.random.PRNGKey(seed))
     servers = [RSUServer(init, p, scheme=sc.scheme, use_kernel=use_kernel,
@@ -65,7 +69,11 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
     # reconcile boundary (handed-over vehicles by their new RSU).
     sel = make_selection_state(spec, p, corridor, seed, sc.rounds,
                                resel_every=sc.reconcile_every)
-    timeline = _Timeline(p, seed, distance_fn=corridor.distance)
+    # fault recovery sweeps follow the reconcile cadence, like selection
+    flt = make_fault_state(faults, p, seed, sc.rounds, sc.l_iters,
+                           recheck_every=sc.reconcile_every)
+    timeline = _Timeline(p, seed, distance_fn=corridor.distance,
+                         cl_scale=None if flt is None else flt.cl_scale)
     queue = timeline.queue
     fleet_batch = min(batch_size, min(d.size for d in vehicles_data))
     clients = [Vehicle(d, lr=sc.lr, batch_size=fleet_batch, seed=seed)
@@ -76,7 +84,7 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
         return timeline.schedule(vehicle, t_download,
                                  payload=servers[rsu].global_params)
 
-    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+    for k in initial_vehicles(sel, flt, p.K):
         schedule(k, 0.0)
 
     timers = PhaseTimers()
@@ -100,8 +108,16 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
                     np.asarray(corridor.serving_rsu(vs, ts), np.int64),
                     minlength=sc.n_rsus))
             ev = queue.pop()
-            local_params, _ = clients[ev.vehicle].local_update(ev.payload,
-                                                               sc.l_iters)
+            keep = True
+            if flt is not None:
+                # staleness-cap verdict + this cycle's epoch count, fixed
+                # before the gate below draws the *next* cycle's block
+                keep, _ = flt.on_pop(ev.vehicle, total)
+            local_params, _ = clients[ev.vehicle].local_update(
+                ev.payload, sc.l_iters,
+                n_ep=(flt.epoch_of(ev.vehicle)
+                      if flt is not None and flt.spec.has_partial
+                      else None))
             rsu = int(corridor.serving_rsu(ev.vehicle, ev.time))  # handover target
             if met_req:
                 ch_stale.append(ev.time - ev.download_time)
@@ -111,7 +127,7 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
             rec = servers[rsu].receive(
                 local_params, time=ev.time, vehicle=ev.vehicle,
                 upload_delay=ev.upload_delay, train_delay=ev.train_delay,
-                download_time=ev.download_time)
+                download_time=ev.download_time, discard=not keep)
             rec.rsu = rsu
             total += 1
             consensus = None
@@ -139,17 +155,21 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
                     progress(total, acc)
             result.rounds.append(rec)
             nev = None
-            if sel is None:
+            if sel is None and flt is None:
                 nev = schedule(ev.vehicle, ev.time)
             else:
                 # mask at schedule (post-reconcile, like the ordinary
-                # re-download): park unadmitted vehicles, re-score at every
-                # reconcile boundary, wake newly admitted parked vehicles
-                if sel.on_arrival(ev.vehicle, ev.upload_delay,
-                                  ev.train_delay):
-                    nev = schedule(ev.vehicle, ev.time)
-                for v in sel.maybe_reselect(total, ev.time):
-                    schedule(v, ev.time)
+                # re-download): park unadmitted/faulted vehicles, re-score
+                # and sweep recoveries at every reconcile boundary
+                res = {}
+                arrival_step(
+                    sel, flt, r=total - 1, vehicle=ev.vehicle, time=ev.time,
+                    upload_delay=ev.upload_delay,
+                    train_delay=ev.train_delay, pending=len(queue),
+                    schedule=lambda v, t=ev.time: res.__setitem__(
+                        "nev", schedule(v, t)),
+                    readmit=lambda v, t=ev.time: schedule(v, t))
+                nev = res.get("nev")
             if met_req:
                 # handover = the admitted re-schedule lands on a new RSU;
                 # parked vehicles (and boundary re-admissions) don't count
@@ -160,6 +180,9 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
     result.final_params = reconcile_models(
         [s.global_params for s in servers])
     sel_summary = None if sel is None else sel.plan().summary()
+    flt_plan = None if flt is None else flt.plan()
+    if flt_plan is not None:
+        result.extras["faults"] = flt_plan.summary(sc.l_iters)
     ho_count = (np.bincount(np.asarray(ch_rsu, np.int64)[
         np.asarray(ch_ho, bool)], minlength=sc.n_rsus)
         if met_req else None)
@@ -170,5 +193,5 @@ def run_handover_simulation(sc, vehicles_data: Sequence,
         occ=ch_occ, gap=ch_gap, times=ch_times, n_rsus=sc.n_rsus,
         up_rsu=np.asarray(ch_rsu, np.int64) if met_req else None,
         handover=np.asarray(ch_ho, bool) if met_req else None,
-        handover_count=ho_count)
+        handover_count=ho_count, faults=flt_plan, l_iters=sc.l_iters)
     return result

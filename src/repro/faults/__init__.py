@@ -1,0 +1,18 @@
+"""Fault injection: stochastic client-state simulation with graceful
+degradation across every engine (DESIGN.md §16)."""
+from repro.faults.replay import replay_corridor_faults, replay_fleet_faults
+from repro.faults.runtime import (FaultPlan, FaultState, arrival_step,
+                                  check_faults_reconcile, fold_admission,
+                                  fold_readmits, initial_vehicles,
+                                  make_fault_state)
+from repro.faults.spec import (PROFILES, FaultSpec, faults_requested,
+                               named_profile, resolve_faults,
+                               scenario_faults)
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "FaultState", "PROFILES", "arrival_step",
+    "check_faults_reconcile", "faults_requested", "fold_admission",
+    "fold_readmits", "initial_vehicles", "make_fault_state",
+    "named_profile", "replay_corridor_faults", "replay_fleet_faults",
+    "resolve_faults", "scenario_faults",
+]

@@ -20,15 +20,25 @@ import jax.numpy as jnp
 
 
 def fleet_state(spec):
-    """Initial metrics carry for the single-RSU engines."""
-    return (jnp.zeros(spec.n_bins, jnp.int32), jnp.float32(0.0))
+    """Initial metrics carry for the single-RSU engines.  When the spec
+    arms ``fault_counters`` (a fault model is active, DESIGN.md §16) the
+    carry gains an ``i32[4]`` accumulator — (dropped, blackout, partial,
+    discarded) — fed per pop from the fault plan's static counts table
+    and conformance-checked against the f64 fault replay."""
+    st = (jnp.zeros(spec.n_bins, jnp.int32), jnp.float32(0.0))
+    if spec.fault_counters:
+        st = st + (jnp.zeros(4, jnp.int32),)
+    return st
 
 
 def corridor_state(spec):
     """Initial metrics carry for the corridor engine."""
-    return (jnp.zeros((spec.n_rsus, spec.n_bins), jnp.int32),
-            jnp.float32(0.0),
-            jnp.zeros(spec.n_rsus, jnp.int32))
+    st = (jnp.zeros((spec.n_rsus, spec.n_bins), jnp.int32),
+          jnp.float32(0.0),
+          jnp.zeros(spec.n_rsus, jnp.int32))
+    if spec.fault_counters:
+        st = st + (jnp.zeros(4, jnp.int32),)
+    return st
 
 
 def stale_bin(edges, stale):
@@ -39,22 +49,28 @@ def stale_bin(edges, stale):
     return jnp.searchsorted(edges, stale)
 
 
-def fleet_pop(mst, edges, *, t, dl_t):
+def fleet_pop(mst, edges, *, t, dl_t, fault_row=None):
     """Fold one pop into the fleet metrics carry; returns the new carry
-    and the pop's ``(gap,)`` wait column."""
-    hist, prev_t = mst
+    and the pop's ``(gap,)`` wait column.  ``fault_row`` is the pop's
+    ``i32[4]`` fault-counter increment (required iff the carry holds the
+    fault accumulator)."""
+    hist, prev_t, *rest = mst
     hist = hist.at[stale_bin(edges, t - dl_t)].add(1)
-    return (hist, t), t - prev_t
+    if rest:
+        rest = [rest[0] + fault_row]
+    return (hist, t, *rest), t - prev_t
 
 
-def corridor_pop(mst, edges, *, t, dl_t, j, handover):
+def corridor_pop(mst, edges, *, t, dl_t, j, handover, fault_row=None):
     """Fold one pop into the corridor metrics carry (per-RSU histogram
     row ``j`` — the RSU the upload landed on; handover counted at the
     source row).  Returns the new carry and the pop's wait."""
-    hist, prev_t, ho_cnt = mst
+    hist, prev_t, ho_cnt, *rest = mst
     hist = hist.at[j, stale_bin(edges, t - dl_t)].add(1)
     ho_cnt = ho_cnt.at[j].add(jnp.asarray(handover, jnp.int32))
-    return (hist, t, ho_cnt), t - prev_t
+    if rest:
+        rest = [rest[0] + fault_row]
+    return (hist, t, ho_cnt, *rest), t - prev_t
 
 
 class RingStats:

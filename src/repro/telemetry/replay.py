@@ -25,18 +25,24 @@ from __future__ import annotations
 import numpy as np
 
 from repro.channel import ChannelParams, CorridorMobility, Mobility
+from repro.faults import arrival_step, initial_vehicles, make_fault_state
 from repro.selection import make_selection_state
 
 
 def replay_fleet_channels(p: ChannelParams, seed: int, rounds: int,
-                          selection=None) -> dict:
+                          selection=None, faults=None,
+                          l_iters: int = 5) -> dict:
     """Re-drive the single-RSU fleet timeline; returns the f64 channel
-    record for ``rounds`` pops."""
+    record for ``rounds`` pops.  A fault model drives the identical
+    :class:`~repro.faults.runtime.FaultState` composition the engines
+    replay (DESIGN.md §16), so the channels stay conformant under
+    injected faults too."""
     from repro.core.mafl import _Timeline
 
     sel = make_selection_state(selection, p, Mobility(p), seed, rounds)
-    tl = _Timeline(p, seed)
-    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+    flt = make_fault_state(faults, p, seed, rounds, l_iters)
+    tl = _Timeline(p, seed, cl_scale=None if flt is None else flt.cl_scale)
+    for k in initial_vehicles(sel, flt, p.K):
         tl.schedule(k, 0.0)
 
     M = rounds
@@ -54,13 +60,16 @@ def replay_fleet_channels(p: ChannelParams, seed: int, rounds: int,
         stale[r] = ev.time - ev.download_time
         gap[r] = ev.time - prev_t
         prev_t = ev.time
-        if sel is None:
+        if sel is None and flt is None:
             tl.schedule(ev.vehicle, ev.time)
         else:
-            if sel.on_arrival(ev.vehicle, ev.upload_delay, ev.train_delay):
-                tl.schedule(ev.vehicle, ev.time)
-            for v in sel.maybe_reselect(r + 1, ev.time):
-                tl.schedule(v, ev.time)
+            if flt is not None:
+                flt.on_pop(ev.vehicle, r)
+            arrival_step(
+                sel, flt, r=r, vehicle=ev.vehicle, time=ev.time,
+                upload_delay=ev.upload_delay, train_delay=ev.train_delay,
+                pending=len(tl.queue),
+                schedule=lambda v, t=ev.time: tl.schedule(v, t))
         tl.prune()
     return {"veh": veh, "times": times, "stale": stale,
             "occupancy": occ, "gap": gap}
@@ -69,7 +78,8 @@ def replay_fleet_channels(p: ChannelParams, seed: int, rounds: int,
 def replay_corridor_channels(p: ChannelParams, n_rsus: int, seed: int,
                              rounds: int, entry: str = "uniform",
                              selection=None,
-                             reconcile_every: int = 0) -> dict:
+                             reconcile_every: int = 0, faults=None,
+                             l_iters: int = 1) -> dict:
     """Re-drive the corridor timeline; adds the per-RSU channels.
 
     A pending slot's RSU row is the cell serving the vehicle at *arrival*
@@ -77,14 +87,18 @@ def replay_corridor_channels(p: ChannelParams, n_rsus: int, seed: int,
     the slot migration), so per-RSU occupancy is computable from the
     pending events alone.  The handover flag marks an admitted
     re-schedule whose new arrival is served by a different RSU than the
-    upload it follows; it is counted at the source RSU."""
+    upload it follows; it is counted at the source RSU (a fault-suppressed
+    re-schedule never migrates, so it never counts)."""
     from repro.core.mafl import _Timeline
 
     corridor = CorridorMobility(p, n_rsus, entry=entry)
     sel = make_selection_state(selection, p, corridor, seed, rounds,
                                resel_every=reconcile_every)
-    tl = _Timeline(p, seed, distance_fn=corridor.distance)
-    for k in (range(p.K) if sel is None else sel.initial_vehicles()):
+    flt = make_fault_state(faults, p, seed, rounds, l_iters,
+                           recheck_every=reconcile_every)
+    tl = _Timeline(p, seed, distance_fn=corridor.distance,
+                   cl_scale=None if flt is None else flt.cl_scale)
+    for k in initial_vehicles(sel, flt, p.K):
         tl.schedule(k, 0.0)
 
     M = rounds
@@ -113,16 +127,25 @@ def replay_corridor_channels(p: ChannelParams, n_rsus: int, seed: int,
         stale[r] = ev.time - ev.download_time
         gap[r] = ev.time - prev_t
         prev_t = ev.time
-        admitted = (sel is None
-                    or sel.on_arrival(ev.vehicle, ev.upload_delay,
-                                      ev.train_delay))
-        if admitted:
+        if sel is None and flt is None:
             nev = tl.schedule(ev.vehicle, ev.time)
             handover[r] = int(
                 corridor.serving_rsu(ev.vehicle, nev.time)) != j
-        if sel is not None:
-            for v in sel.maybe_reselect(r + 1, ev.time):
-                tl.schedule(v, ev.time)
+        else:
+            if flt is not None:
+                flt.on_pop(ev.vehicle, r)
+            res = {}
+            arrival_step(
+                sel, flt, r=r, vehicle=ev.vehicle, time=ev.time,
+                upload_delay=ev.upload_delay, train_delay=ev.train_delay,
+                pending=len(tl.queue),
+                schedule=lambda v, t=ev.time: res.__setitem__(
+                    "nev", tl.schedule(v, t)),
+                readmit=lambda v, t=ev.time: tl.schedule(v, t))
+            nev = res.get("nev")
+            if nev is not None:
+                handover[r] = int(
+                    corridor.serving_rsu(ev.vehicle, nev.time)) != j
         tl.prune()
     return {"veh": veh, "times": times, "stale": stale,
             "occupancy": occ, "gap": gap, "up_rsu": up_rsu,

@@ -58,6 +58,7 @@ class RunReport:
     phases: dict = field(default_factory=dict)
     memory: dict = field(default_factory=dict)
     selection: Optional[dict] = None     # SelectionPlan.summary()
+    faults: Optional[dict] = None        # fault spec + decision counts
     waves: Optional[dict] = None         # wave_stats() (device engines)
     channels: dict = field(default_factory=dict)
     schema: str = SCHEMA

@@ -40,6 +40,9 @@ class MetricsSpec:
     edges: tuple = ()
     n_rsus: int = 1
     ring_guard: bool = False
+    # fault-injection counters (dropped uploads / partial epochs / blackout
+    # rounds / cap discards) ride the scan carry when a fault model is on
+    fault_counters: bool = False
 
     @property
     def n_bins(self) -> int:
@@ -49,12 +52,14 @@ class MetricsSpec:
         """Hashable identity for the engines' program-cache keys.  A
         disabled spec must never reach a cache key — the engines map it
         to None first, so ``metrics=off`` shares the legacy executable."""
-        return (self.enabled, self.edges, self.n_rsus, self.ring_guard)
+        return (self.enabled, self.edges, self.n_rsus, self.ring_guard,
+                self.fault_counters)
 
     def to_json(self) -> dict:
         return {"enabled": self.enabled, "edges": list(self.edges),
                 "n_bins": self.n_bins, "n_rsus": self.n_rsus,
-                "ring_guard": self.ring_guard}
+                "ring_guard": self.ring_guard,
+                "fault_counters": self.fault_counters}
 
 
 def _f32(x: float) -> float:
@@ -152,15 +157,18 @@ def metrics_requested(metrics) -> bool:
 
 def resolve_metrics(metrics, *, stale, times, n_rsus: int = 1,
                     ring_guard: bool = False,
-                    n_bins: int = DEFAULT_BINS) -> Optional[MetricsSpec]:
+                    n_bins: int = DEFAULT_BINS,
+                    fault_counters: bool = False) -> Optional[MetricsSpec]:
     """Normalize the engines' ``metrics`` argument into a MetricsSpec (or
     None for the exact legacy program).  ``stale``/``times`` are the host
     dry run's f64 per-round staleness and pop times — the planner derives
-    safe histogram edges from them."""
+    safe histogram edges from them.  ``fault_counters`` arms the fault
+    channels when the run carries a fault model (DESIGN.md §16)."""
     if not metrics_requested(metrics):
         return None
     if isinstance(metrics, MetricsSpec):
         return metrics
     return MetricsSpec(enabled=True,
                        edges=plan_stale_edges(stale, times, n_bins),
-                       n_rsus=n_rsus, ring_guard=ring_guard)
+                       n_rsus=n_rsus, ring_guard=ring_guard,
+                       fault_counters=fault_counters)

@@ -108,6 +108,58 @@ def test_mid_simulation_resume_restores_global_model_bit_exact(tmp_path):
         tree_digest(cont_mem.final_params)
 
 
+def test_kill_mid_write_never_corrupts_latest(tmp_path, monkeypatch):
+    """Atomic publication: a writer killed mid-npz-write leaves only a
+    ``.tmp`` sibling — ``latest_checkpoint`` still returns the previous
+    intact checkpoint, which still loads bit-exactly, and the next
+    successful save sweeps the debris."""
+    import repro.checkpointing.checkpoint as ckpt_mod
+    tree = {"w": np.arange(8.0, dtype=np.float32)}
+    good = save_checkpoint(str(tmp_path), 0, tree, meta={"round": 0})
+    digest = tree_digest(load_checkpoint(good, tree))
+
+    real_savez = np.savez
+
+    def dying_savez(f, **arrays):
+        f.write(b"PK\x03\x04 truncated mid-write")
+        raise KeyboardInterrupt          # the kill lands inside the write
+
+    monkeypatch.setattr(ckpt_mod.np, "savez", dying_savez)
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(str(tmp_path), 1, tree, meta={"round": 1})
+    monkeypatch.setattr(ckpt_mod.np, "savez", real_savez)
+
+    # the half-written step-1 checkpoint was never published: no npz, no
+    # sidecar json, latest still the intact step-0 file
+    assert not os.path.exists(os.path.join(tmp_path, "ckpt_00000001.npz"))
+    assert not os.path.exists(
+        os.path.join(tmp_path, "ckpt_00000001.npz.json"))
+    assert latest_checkpoint(str(tmp_path)) == good
+    assert tree_digest(load_checkpoint(good, tree)) == digest
+    assert any(f.endswith(".tmp") for f in os.listdir(tmp_path))
+
+    # the next save publishes normally and sweeps the orphaned .tmp
+    save_checkpoint(str(tmp_path), 2, tree, meta={"round": 2})
+    assert latest_checkpoint(str(tmp_path)).endswith("ckpt_00000002.npz")
+    assert not any(f.endswith(".tmp") for f in os.listdir(tmp_path))
+
+
+def test_kill_mid_sidecar_write_withholds_the_npz(tmp_path, monkeypatch):
+    """The npz replace is the commit point and it happens after the
+    sidecar: a kill during the json write publishes neither file."""
+    import repro.checkpointing.checkpoint as ckpt_mod
+    tree = {"w": np.ones(3, np.float32)}
+
+    def dying_dump(obj, f):
+        raise KeyboardInterrupt
+
+    monkeypatch.setattr(ckpt_mod.json, "dump", dying_dump)
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(str(tmp_path), 0, tree, meta={"round": 0})
+    assert latest_checkpoint(str(tmp_path)) is None
+    assert not os.path.exists(os.path.join(tmp_path, "ckpt_00000000.npz"))
+
+
 # ---------------------------------------------------------------------------
 # FedBuff partial-buffer edge cases
 # ---------------------------------------------------------------------------
